@@ -1,0 +1,63 @@
+"""Shared benchmark plumbing: seeded multi-run sweeps + CSV emission."""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim import SimConfig, run_sim  # noqa: E402
+from repro.sim.metrics import aggregate_seeds  # noqa: E402
+from repro.traces import generate_trace, profile_capacity  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+# Paper window: 5 s warmup + 15 s measurement.  --quick shrinks it.
+FULL = dict(warmup=5.0, measure=15.0, duration=22.0, seeds=5)
+QUICK = dict(warmup=2.0, measure=8.0, duration=11.0, seeds=2)
+
+
+def knobs(quick: bool) -> dict:
+    return QUICK if quick else FULL
+
+
+def run_point(scheduler: str, profile: str, *, rate_frac: float = 1.0,
+              seeds: int = 5, duration: float = 22.0, warmup: float = 5.0,
+              measure: float = 15.0, trace_kw: dict | None = None,
+              cfg_kw: dict | None = None, cap_kw: dict | None = None) -> dict:
+    """One (scheduler, workload, rate) point aggregated over seeds."""
+    cap = profile_capacity(profile, **(cap_kw or {}))
+    runs = []
+    for seed in range(seeds):
+        trace = generate_trace(profile, duration=duration,
+                               target_rps=cap * rate_frac, seed=seed,
+                               **(trace_kw or {}))
+        cfg = SimConfig(scheduler=scheduler, seed=seed, warmup=warmup,
+                        measure=measure, **(cfg_kw or {"background": 0.2}))
+        runs.append(run_sim(cfg, trace))
+    agg = aggregate_seeds(runs)
+    agg.update(profile=profile, rate_frac=rate_frac)
+    return agg
+
+
+def write_csv(name: str, rows: list[dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    keys: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """run.py contract: ``name,us_per_call,derived`` CSV line on stdout."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,53 @@
+"""Experiment 1 (Table II): load sweep 50%-250% of calibrated capacity,
+three workload profiles, full baseline set; also emits the Table VI tier
+distribution at RAG 100%."""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, knobs, run_point, write_csv
+
+SCHEDULERS = ["rr", "la", "ca", "cla", "netkv-static", "netkv-full"]
+RATES = [0.5, 1.0, 2.0, 2.5]
+PROFILES = ["chatbot", "rag", "long_context"]
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    rates = [1.0, 2.0] if quick else RATES
+    profiles = ["rag"] if quick else PROFILES
+    scheds = ["rr", "cla", "netkv-full"] if quick else SCHEDULERS
+    rows = []
+    for profile in profiles:
+        for rate in rates:
+            for sched in scheds:
+                t0 = time.time()
+                row = run_point(sched, profile, rate_frac=rate, seeds=k["seeds"],
+                                duration=k["duration"], warmup=k["warmup"],
+                                measure=k["measure"])
+                row["wall_s"] = round(time.time() - t0, 1)
+                rows.append(row)
+                print(f"  exp1 {profile} {int(rate*100)}% {sched}: "
+                      f"ttft={row['ttft_mean']*1e3:.0f}±{row['ttft_mean_std']*1e3:.0f}ms "
+                      f"slo={row['slo_attainment']:.3f} xfer={row['xfer_mean']*1e3:.0f}ms "
+                      f"t2:t3={row['tier2']:.2f}:{row['tier3']:.2f}")
+    write_csv("exp1_load_sweep", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    rag = [r for r in rows if r["profile"] == "rag" and r["rate_frac"] == 1.0]
+    rr = next(r for r in rag if r["scheduler"] == "rr")
+    nk = next(r for r in rag if r["scheduler"] == "netkv-full")
+    d = (1 - nk["ttft_mean"] / rr["ttft_mean"]) * 100
+    emit("exp1_load_sweep", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"rag100:netkv_vs_rr={d:.1f}%;tiershift={rr['tier3']:.2f}->{nk['tier3']:.2f}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(quick="--quick" in sys.argv)

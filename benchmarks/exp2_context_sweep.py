@@ -1,0 +1,48 @@
+"""Experiment 2 (Table III): context-length sweep at RAG 100% load —
+Proposition 1's empirical face: the NetKV advantage grows with input length
+while the workload stays schedulable."""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, knobs, run_point, write_csv
+
+LENGTHS = [1024, 4096, 8192, 16384, 32768]
+SCHEDULERS = ["rr", "ca", "cla", "netkv-full"]
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    lengths = [4096, 16384] if quick else LENGTHS
+    scheds = ["rr", "cla", "netkv-full"] if quick else SCHEDULERS
+    rows = []
+    for length in lengths:
+        for sched in scheds:
+            row = run_point(sched, "rag", seeds=k["seeds"], duration=k["duration"],
+                            warmup=k["warmup"], measure=k["measure"],
+                            trace_kw={"input_len_override": length})
+            row["input_len"] = length
+            rows.append(row)
+            print(f"  exp2 len={length} {sched}: ttft={row['ttft_mean']*1e3:.0f}ms "
+                  f"slo={row['slo_attainment']:.3f}")
+    write_csv("exp2_context_sweep", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    deltas = []
+    for length in sorted({r["input_len"] for r in rows}):
+        sub = [r for r in rows if r["input_len"] == length]
+        rr = next(r for r in sub if r["scheduler"] == "rr")
+        nk = next(r for r in sub if r["scheduler"] == "netkv-full")
+        deltas.append((length, (1 - nk["ttft_mean"] / rr["ttft_mean"]) * 100))
+    trend = ";".join(f"{l}:{d:.1f}%" for l, d in deltas)
+    emit("exp2_context_sweep", (time.time() - t0) * 1e6 / max(len(rows), 1), trend)
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,66 @@
+"""Experiment 3 (Fig. 1): topology sensitivity — cross-pod oversubscription
+ratio x background-traffic intensity grid; NetKV's edge must grow along both
+axes and win in every cell."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.oracle import PAPER_TIER_BANDWIDTH
+
+from .common import emit, knobs, run_point, write_csv
+
+OVERSUB = [1, 2, 4, 8]          # B3 = B1 / oversub
+BACKGROUND = [0.0, 0.1, 0.2, 0.4]
+SCHEDULERS = ["cla", "netkv-static", "netkv-full"]
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    oversubs = [1, 8] if quick else OVERSUB
+    bgs = [0.0, 0.4] if quick else BACKGROUND
+    scheds = ["cla", "netkv-full"] if quick else SCHEDULERS
+    rows = []
+    for ov in oversubs:
+        tier_bw = dict(PAPER_TIER_BANDWIDTH)
+        tier_bw[3] = tier_bw[1] / ov
+        tier_bw[2] = tier_bw[1] / max(ov / 2, 1)
+        for bg in bgs:
+            for sched in scheds:
+                row = run_point(
+                    sched, "rag", seeds=k["seeds"], duration=k["duration"],
+                    warmup=k["warmup"], measure=k["measure"],
+                    cfg_kw={"background": bg, "tier_bandwidth": tier_bw},
+                    cap_kw={"background": bg,
+                            "agg_egress_bytes_per_s": 8 * tier_bw[3],
+                            "tor_egress_bytes_per_s": 8 * tier_bw[2]},
+                )
+                row.update(oversub=ov, bg=bg)
+                rows.append(row)
+                print(f"  exp3 {ov}:1 bg={bg} {sched}: ttft={row['ttft_mean']*1e3:.0f}ms")
+    write_csv("exp3_topology", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    wins = total = 0
+    corner = {}
+    for ov in sorted({r["oversub"] for r in rows}):
+        for bg in sorted({r["bg"] for r in rows}):
+            sub = [r for r in rows if r["oversub"] == ov and r["bg"] == bg]
+            cla = next(r for r in sub if r["scheduler"] == "cla")
+            nk = next(r for r in sub if r["scheduler"] == "netkv-full")
+            total += 1
+            wins += nk["ttft_mean"] < cla["ttft_mean"]
+            corner[(ov, bg)] = (1 - nk["ttft_mean"] / cla["ttft_mean"]) * 100
+    lo = corner[min(corner)]
+    hi = corner[max(corner)]
+    emit("exp3_topology", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"wins={wins}/{total};minstress={lo:.1f}%;maxstress={hi:.1f}%")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,44 @@
+"""Experiment 4 (Fig. 2): oracle staleness sweep 100 ms -> 60 s.
+TTFT/TBT/SLO must be essentially invariant (Prop. 2 + static-tier dominance)."""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, knobs, run_point, write_csv
+
+INTERVALS = [0.1, 1.0, 10.0, 60.0]
+SCHEDULERS = ["cla", "netkv-static", "netkv-full"]
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    intervals = [0.1, 60.0] if quick else INTERVALS
+    scheds = ["cla", "netkv-full"] if quick else SCHEDULERS
+    rows = []
+    for dt in intervals:
+        for sched in scheds:
+            row = run_point(sched, "rag", seeds=k["seeds"], duration=k["duration"],
+                            warmup=k["warmup"], measure=k["measure"],
+                            cfg_kw={"background": 0.2, "oracle_refresh": dt,
+                                    "bg_wander": 0.4})
+            row["oracle_refresh"] = dt
+            rows.append(row)
+            print(f"  exp4 dt={dt}s {sched}: ttft={row['ttft_mean']*1e3:.0f}ms")
+    write_csv("exp4_staleness", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    nk = [r for r in rows if r["scheduler"] == "netkv-full"]
+    spread = (max(r["ttft_mean"] for r in nk) - min(r["ttft_mean"] for r in nk)) / \
+        min(r["ttft_mean"] for r in nk) * 100
+    emit("exp4_staleness", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"ttft_spread_over_refresh={spread:.1f}%")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

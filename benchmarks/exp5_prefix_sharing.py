@@ -1,0 +1,47 @@
+"""Experiment 5 (Fig. 3): prefix-sharing sweep p_share 0 -> 0.9 — the
+network-aware gain must stay roughly constant (orthogonal to cache-awareness)."""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, knobs, run_point, write_csv
+
+P_SHARES = [0.0, 0.3, 0.5, 0.7, 0.9]
+SCHEDULERS = ["ca", "cla", "netkv-full"]
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    shares = [0.0, 0.7] if quick else P_SHARES
+    scheds = ["cla", "netkv-full"] if quick else SCHEDULERS
+    rows = []
+    for ps in shares:
+        for sched in scheds:
+            row = run_point(sched, "rag", seeds=k["seeds"], duration=k["duration"],
+                            warmup=k["warmup"], measure=k["measure"],
+                            trace_kw={"p_share": ps})
+            row["p_share"] = ps
+            rows.append(row)
+            print(f"  exp5 p={ps} {sched}: ttft={row['ttft_mean']*1e3:.0f}ms "
+                  f"hit={row.get('tier0', 0):.2f}")
+    write_csv("exp5_prefix_sharing", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    deltas = []
+    for ps in sorted({r["p_share"] for r in rows}):
+        sub = [r for r in rows if r["p_share"] == ps]
+        cla = next(r for r in sub if r["scheduler"] == "cla")
+        nk = next(r for r in sub if r["scheduler"] == "netkv-full")
+        deltas.append((1 - nk["ttft_mean"] / cla["ttft_mean"]) * 100)
+    emit("exp5_prefix_sharing", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"delta_range={min(deltas):.1f}%..{max(deltas):.1f}%")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,44 @@
+"""Experiment 6 (Table IV / Fig. 4): component ablation ladder
+CLA* -> +static tier -> +self-contention -> +dynamic congestion, on all
+three profiles; the static tier signal must dominate."""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, knobs, run_point, write_csv
+
+LADDER = ["cla", "netkv-topo", "netkv-static", "netkv-full"]
+PROFILES = ["chatbot", "rag", "long_context"]
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    profiles = ["rag"] if quick else PROFILES
+    rows = []
+    for profile in profiles:
+        for sched in LADDER:
+            row = run_point(sched, profile, seeds=k["seeds"], duration=k["duration"],
+                            warmup=k["warmup"], measure=k["measure"])
+            rows.append(row)
+            print(f"  exp6 {profile} {sched}: ttft={row['ttft_mean']*1e3:.0f}ms "
+                  f"p99={row['ttft_p99']*1e3:.0f}ms tbt={row['tbt_mean']*1e3:.2f}ms")
+    write_csv("exp6_ablation", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    prof = rows[0]["profile"]
+    sub = {r["scheduler"]: r for r in rows if r["profile"] == prof}
+    cla, topo, full = sub["cla"], sub["netkv-topo"], sub["netkv-full"]
+    static_gain = (1 - topo["ttft_mean"] / cla["ttft_mean"]) * 100
+    full_gain = (1 - full["ttft_mean"] / cla["ttft_mean"]) * 100
+    emit("exp6_ablation", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"{prof}:static={static_gain:.1f}%of_full={full_gain:.1f}%")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,78 @@
+"""Experiment 7 (Table V / Fig. 5): cluster scaling 64 -> 1024 GPUs
+(flow-level), NetKV-vs-CLA* gap + transfer-time divergence + scheduler
+decision latency (Python loop vs vectorised JAX scorer)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.sim import SimConfig, run_sim
+from repro.sim.metrics import aggregate_seeds
+from repro.traces import generate_trace, profile_capacity
+
+from .common import emit, knobs, write_csv
+
+# (gpus, pods, racks/pod, servers/rack): 8 GPUs/server throughout.
+# Racks scale within 2 pods so the packed prefill pool never swallows a
+# whole pod (that would leave only tier-3 candidates and collapse every
+# scheduler onto the same degenerate choice).
+SCALES = [(64, 2, 2, 2), (128, 2, 4, 2), (256, 2, 8, 2), (512, 2, 16, 2), (1024, 2, 32, 2)]
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    scales = SCALES[:2] if quick else SCALES
+    rows = []
+    for gpus, pods, racks, servers in scales:
+        n_inst = gpus // 4 // 8  # keep prefill:decode = 1:3 per 16 instances
+        n_prefill = max(gpus // 64, 1) * 4
+        n_decode = gpus // 4 - n_prefill
+        cap = profile_capacity("rag", n_prefill=n_prefill, n_decode=n_decode,
+                               tor_egress_bytes_per_s=8 * 50e9 / 8 * max(gpus // 64, 1))
+        for sched in ["cla", "netkv-full"]:
+            runs = []
+            lat = []
+            for seed in range(k["seeds"]):
+                trace = generate_trace("rag", duration=k["duration"],
+                                       target_rps=cap, seed=seed)
+                cfg = SimConfig(scheduler=sched, seed=seed, background=0.2,
+                                n_pods=pods, racks_per_pod=racks,
+                                servers_per_rack=servers, n_prefill=n_prefill,
+                                warmup=k["warmup"], measure=k["measure"])
+                from repro.sim import Simulation
+
+                sim = Simulation(cfg)
+                runs.append(sim.run(trace))
+                lat.extend(sim.decision_latencies)
+            row = aggregate_seeds(runs)
+            row.update(gpus=gpus, n_decode=n_decode,
+                       decision_latency_ms=float(np.mean(lat)) * 1e3,
+                       decision_latency_p99_ms=float(np.percentile(lat, 99)) * 1e3)
+            rows.append(row)
+            print(f"  exp7 {gpus}gpus {sched}: ttft={row['ttft_mean']*1e3:.0f}ms "
+                  f"xfer={row['xfer_mean']*1e3:.0f}ms "
+                  f"lat={row['decision_latency_ms']:.3f}ms")
+    write_csv("exp7_scalability", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    by = {}
+    for r in rows:
+        by.setdefault(r["gpus"], {})[r["scheduler"]] = r
+    parts = []
+    for g, d in sorted(by.items()):
+        delta = (1 - d["netkv-full"]["ttft_mean"] / d["cla"]["ttft_mean"]) * 100
+        parts.append(f"{g}:{delta:.1f}%")
+    worst_lat = max(r["decision_latency_p99_ms"] for r in rows)
+    emit("exp7_scalability", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         ";".join(parts) + f";p99lat={worst_lat:.2f}ms")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,65 @@
+"""Beyond-paper experiments: (a) batch-level joint assignment (§VII-C future
+work), (b) EWMA predictive congestion, (c) straggler-aware scoring, (d)
+fault-injection resilience across the ladder."""
+
+from __future__ import annotations
+
+import time
+
+from repro.sim import FaultEvent, SimConfig, run_sim
+from repro.sim.metrics import aggregate_seeds
+from repro.traces import generate_trace, profile_capacity
+
+from .common import emit, knobs, write_csv
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    cap = profile_capacity("rag")
+    rows = []
+
+    def point(sched, label, cfg_extra=None, rate=1.6):
+        runs = []
+        for seed in range(k["seeds"]):
+            trace = generate_trace("rag", duration=k["duration"],
+                                   target_rps=cap * rate, seed=seed)
+            cfg = SimConfig(scheduler=sched, seed=seed, background=0.25,
+                            bg_wander=0.5, warmup=k["warmup"],
+                            measure=k["measure"], **(cfg_extra or {}))
+            runs.append(run_sim(cfg, trace))
+        row = aggregate_seeds(runs)
+        row["variant"] = label
+        rows.append(row)
+        print(f"  exp8 {label}: ttft={row['ttft_mean']*1e3:.0f}ms "
+              f"slo={row['slo_attainment']:.3f}")
+        return row
+
+    # (a)+(b): the beyond-paper policies vs the paper's best
+    point("netkv-full", "netkv-full(paper)")
+    point("netkv-batch", "netkv-batch(beyond)")
+    point("netkv-pred", "netkv-pred(beyond)")
+    # (d) fault resilience: kill a decode instance mid-run
+    faults = [FaultEvent(time=6.0, kind="kill_decode", instance_id=5)]
+    point("cla", "cla+fault", {"faults": faults}, rate=1.0)
+    point("netkv-full", "netkv-full+fault", {"faults": faults}, rate=1.0)
+    # (c) straggler: slow an instance 4x
+    slow = [FaultEvent(time=0.5, kind="slowdown", instance_id=7, factor=4.0)]
+    point("netkv-full", "netkv-full+straggler", {"faults": slow}, rate=1.0)
+    write_csv("exp8_beyond", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    by = {r["variant"]: r for r in rows}
+    base = by["netkv-full(paper)"]["ttft_mean"]
+    batch = (1 - by["netkv-batch(beyond)"]["ttft_mean"] / base) * 100
+    pred = (1 - by["netkv-pred(beyond)"]["ttft_mean"] / base) * 100
+    emit("exp8_beyond", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"batch={batch:+.1f}%;pred={pred:+.1f}%")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,67 @@
+"""Beyond-paper experiment 9: (a) the TP=8 sparser-pool data point the paper
+leaves open (§VII), (b) multi-hop DRAM staging under decode-cache pressure
+(the Mooncake scenario: per-instance HBM caches thrash, the pod-level DRAM
+store retains hot prefixes)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.sim import SimConfig, run_sim
+from repro.sim.metrics import aggregate_seeds
+from repro.traces import generate_trace, profile_capacity
+
+from .common import emit, knobs, write_csv
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    rows = []
+
+    def point(label, sched, cfg_kw, cap_kw=None, rate=1.0, trace_kw=None):
+        cap = profile_capacity("rag", **(cap_kw or {}))
+        runs = []
+        for seed in range(k["seeds"]):
+            trace = generate_trace("rag", duration=k["duration"],
+                                   target_rps=cap * rate, seed=seed,
+                                   **(trace_kw or {}))
+            cfg = SimConfig(scheduler=sched, seed=seed, warmup=k["warmup"],
+                            measure=k["measure"], background=0.2, **cfg_kw)
+            runs.append(run_sim(cfg, trace))
+        row = aggregate_seeds(runs)
+        row["variant"] = label
+        rows.append(row)
+        print(f"  exp9 {label}: ttft={row['ttft_mean']*1e3:.0f}ms "
+              f"xfer={row['xfer_mean']*1e3:.0f}ms slo={row['slo_attainment']:.3f}")
+        return row
+
+    # (a) TP=8: 8 instances (2 prefill + 6 decode) on the same 64 GPUs —
+    # sparser candidate pool, bigger per-instance transfers.
+    for sched in ["cla", "netkv-full"]:
+        point(f"tp8-{sched}", sched,
+              {"tp": 8, "n_prefill": 2, "hbm_free_per_gpu": 45e9},
+              cap_kw={"n_prefill": 2, "n_decode": 6})
+    # (b) decode-cache pressure: small per-instance KV budget thrashes the
+    # local prefix caches; the per-pod DRAM store (multihop) retains them.
+    pressured = {"hbm_free_per_gpu": 12e9}
+    for sched in ["netkv-full", "netkv-multihop"]:
+        point(f"pressure-{sched}", sched, dict(pressured), rate=1.2,
+              trace_kw={"p_share": 0.8, "n_share_groups": 12})
+    write_csv("exp9_extensions", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    by = {r["variant"]: r for r in rows}
+    tp8 = (1 - by["tp8-netkv-full"]["ttft_mean"] / by["tp8-cla"]["ttft_mean"]) * 100
+    mh = (1 - by["pressure-netkv-multihop"]["xfer_mean"]
+          / by["pressure-netkv-full"]["xfer_mean"]) * 100
+    emit("exp9_extensions", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"tp8_netkv_vs_cla={tp8:.1f}%;multihop_xfer_cut={mh:.1f}%")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,172 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape x mesh).
+
+    compute term    = FLOPs / (chips * peak)
+    memory term     = HBM bytes / (chips * hbm_bw)
+    collective term = collective bytes / (chips * link_bw)
+
+FLOPs and HBM bytes are ANALYTIC (exact formulas from the architecture —
+XLA's cost_analysis counts while-loop bodies once, so its flops/bytes
+undercount scanned work; we report it alongside as a diagnostic).
+Collective bytes come from the loop-aware HLO parser (trip-count
+multipliers from XLA's known_trip_count annotations), which read
+per-device operand sizes — so the division by chips is already applied.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_spec  # noqa: E402
+from repro.models import param_count, param_specs  # noqa: E402
+
+from .common import emit, write_csv  # noqa: E402
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _expert_params(cfg) -> int:
+    """Total parameters living inside MoE expert weight stacks."""
+    if cfg.moe is None:
+        return 0
+    per_layer = cfg.moe.n_experts * 3 * cfg.d_model * cfg.moe.d_expert
+    n_moe_layers = cfg.n_periods * sum(
+        1 for f in cfg.ffn_pattern if f in ("moe", "moe_res"))
+    return per_layer * n_moe_layers
+
+
+def model_flops_terms(spec, shape_name: str) -> dict:
+    """Analytic FLOPs: MODEL_FLOPS (6ND / 2ND convention) + attention."""
+    cfg = spec.model
+    sh = SHAPES[shape_name]
+    s, b = sh["seq_len"], sh["global_batch"]
+    n_total = param_count(param_specs(cfg))
+    exp = _expert_params(cfg)
+    n_active = n_total - exp + int(exp * cfg.moe.top_k / cfg.moe.n_experts) if exp else n_total
+    n_embed = cfg.vocab_size * cfg.d_model
+    n_mm = n_active - n_embed  # embedding gather does no matmul FLOPs
+    l_attn = cfg.n_attn_layers + cfg.n_enc_layers
+    h, dh = cfg.n_heads, cfg.d_head
+    kind = sh["kind"]
+    if kind == "train":
+        tokens = b * s
+        model = 6 * n_mm * tokens
+        attn = 3 * 2 * b * s * s * h * dh * l_attn  # causal: S^2/2 x2 matmuls, x3 fwd+bwd
+    elif kind == "prefill":
+        tokens = b * s
+        model = 2 * n_mm * tokens
+        attn = 2 * b * s * s * h * dh * l_attn
+    else:  # decode: one token against an S-long cache
+        tokens = b
+        model = 2 * n_mm * b
+        attn = 4 * b * s * h * dh * cfg.n_attn_layers
+    return dict(model_flops=float(model), attn_flops=float(attn),
+                total_flops=float(model + attn), n_active=n_active,
+                n_total=n_total, tokens=tokens)
+
+
+def hbm_bytes(spec, shape_name: str, chips: int) -> float:
+    """Analytic per-step global HBM traffic (napkin formulas, documented)."""
+    cfg = spec.model
+    sh = SHAPES[shape_name]
+    s, b = sh["seq_len"], sh["global_batch"]
+    n_total = param_count(param_specs(cfg))
+    kind = sh["kind"]
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.n_enc_layers
+    kv_per_tok = 2 * cfg.n_kv_heads * cfg.d_head * 2 * (
+        cfg.n_attn_layers + cfg.n_enc_layers)
+    if kind == "train":
+        mb = spec.train_microbatches
+        # fwd + remat-recompute + bwd weight reads per microbatch, grad +
+        # optimizer state r/w once, activation rw per layer.
+        traffic = 3 * mb * n_total * 2 + 24 * n_total + 12 * L * (b * s) * d * 2
+    elif kind == "prefill":
+        traffic = n_total * 2 + (b * s) * kv_per_tok + 8 * L * (b * s) * d * 2
+    else:
+        # decode: stream weights + the whole KV cache once per token.
+        cache = b * s * kv_per_tok
+        from repro.models.model import state_bytes
+        fixed = b * (state_bytes(cfg, 0))
+        traffic = n_total * 2 + cache + fixed + 4 * L * b * d * 2
+    return float(traffic)
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_rows(cells=None) -> list[dict]:
+    rows = []
+    for rec in cells or load_cells():
+        if rec["status"] != "ok":
+            if rec["status"] == "skipped":
+                rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                                 mesh=rec["mesh"], status="skipped",
+                                 note=rec.get("reason", "")))
+            continue
+        spec = get_spec(rec["arch"])
+        chips = rec["n_devices"]
+        ft = model_flops_terms(spec, rec["shape"])
+        bytes_g = hbm_bytes(spec, rec["shape"], chips)
+        coll = rec.get("collectives_loop_aware", rec["collectives"])
+        compute_s = ft["total_flops"] / (chips * PEAK_FLOPS)
+        memory_s = bytes_g / (chips * HBM_BW)
+        collective_s = coll["total_bytes"] / ICI_BW  # per-device bytes already
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        m = rec["memory"]
+        mem_gb = (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)
+                  + m.get("output_size_in_bytes", 0) - m.get("alias_size_in_bytes", 0)) / 1e9
+        hlo_flops = rec["cost"].get("flops", 0.0) * chips  # per-dev -> global
+        rows.append(dict(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], status="ok",
+            compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+            dominant=dominant,
+            roofline_frac=compute_s / bound if bound > 0 else 1.0,
+            model_flops=ft["model_flops"], total_flops=ft["total_flops"],
+            useful_ratio=ft["model_flops"] / ft["total_flops"],
+            hlo_flops_raw=hlo_flops,
+            coll_gb=coll["total_bytes"] / 1e9,
+            mem_gb_per_dev=mem_gb, fits_16gb=mem_gb <= 16.0,
+            compile_s=rec.get("compile_s", 0),
+        ))
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = roofline_rows()
+    ok = [r for r in rows if r["status"] == "ok"]
+    write_csv("roofline", rows)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["mesh"] == "pod":
+            print(f"  {r['arch']:22s} {r['shape']:12s} comp={r['compute_s']*1e3:9.2f}ms "
+                  f"mem={r['memory_s']*1e3:9.2f}ms coll={r['collective_s']*1e3:9.2f}ms "
+                  f"-> {r['dominant']:10s} frac={r['roofline_frac']:.2f} "
+                  f"fit16={'Y' if r['fits_16gb'] else 'N'}")
+    n_fit = sum(r["fits_16gb"] for r in ok)
+    doms = {d: sum(1 for r in ok if r["dominant"] == d) for d in
+            ("compute", "memory", "collective")}
+    emit("roofline", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"cells={len(ok)};fit16={n_fit};dom={doms}")
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

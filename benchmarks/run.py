@@ -1,0 +1,68 @@
+"""Benchmark orchestrator: one harness per paper table/figure.
+
+Usage:
+    python -m benchmarks.run [--quick] [--only exp1,roofline]
+
+Prints one ``name,us_per_call,derived`` CSV line per harness (stdout
+contract) and writes full tables to artifacts/bench/*.csv.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    exp1_load_sweep,
+    exp2_context_sweep,
+    exp3_topology,
+    exp4_staleness,
+    exp5_prefix_sharing,
+    exp6_ablation,
+    exp7_scalability,
+    exp8_beyond,
+    exp9_extensions,
+    roofline,
+    sched_latency,
+)
+
+HARNESSES = {
+    "exp1": exp1_load_sweep,       # Table II
+    "exp2": exp2_context_sweep,    # Table III
+    "exp3": exp3_topology,         # Fig. 1
+    "exp4": exp4_staleness,        # Fig. 2
+    "exp5": exp5_prefix_sharing,   # Fig. 3
+    "exp6": exp6_ablation,         # Table IV / Fig. 4
+    "exp7": exp7_scalability,      # Table V / Fig. 5
+    "exp8": exp8_beyond,           # beyond-paper
+    "exp9": exp9_extensions,       # beyond-paper: TP=8 + multihop staging
+    "sched_latency": sched_latency,
+    "roofline": roofline,          # §Roofline (reads dry-run artifacts)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated harness names")
+    args = ap.parse_args()
+    names = list(HARNESSES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = HARNESSES[name]
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+        except Exception as e:  # keep the suite going; report at the end
+            failures += 1
+            print(f"{name},{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Scheduler decision latency vs pool size: Python Alg. 1 loop vs the
+vectorised JAX scorer vs the Pallas kernel (interpret mode on CPU).
+
+Paper reference point: <1.5 ms per decision at 1024 GPUs (256 decode
+instances).  The JAX scorer must stay microseconds out to 16k instances."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CandidateState, H100_TP4_ITER, RequestInfo, make_scheduler
+from repro.core.netkv_jax import JaxNetKV, PoolArrays
+from repro.core.oracle import OracleView, PAPER_TIER_BANDWIDTH, PAPER_TIER_LATENCY
+
+from .common import emit, write_csv
+
+POOLS = [12, 64, 256, 1024, 4096, 16384]
+
+
+def run(quick: bool = False) -> list[dict]:
+    pools = POOLS[:4] if quick else POOLS
+    rng = np.random.default_rng(0)
+    req = RequestInfo(0, 8192, 8192 * 320 * 1024)
+    rows = []
+    for n in pools:
+        cands = [CandidateState(i, float(rng.uniform(1e10, 4e11)),
+                                int(rng.integers(0, 8)), int(rng.integers(0, 64)),
+                                float(rng.integers(0, 8192)))
+                 for i in range(n)]
+        tiers = rng.integers(0, 4, n)
+        view = OracleView(lambda p, d: int(tiers[d % n]), PAPER_TIER_BANDWIDTH,
+                          PAPER_TIER_LATENCY, {t: 0.2 for t in range(4)})
+        # python loop
+        py = make_scheduler("netkv-full", H100_TP4_ITER, 64)
+        reps = max(200 // max(n // 64, 1), 5)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            py.select(req, 0, cands, view, None)
+        t_py = (time.perf_counter() - t0) / reps
+        # jitted scorer (steady state: exclude compile)
+        jx = JaxNetKV(H100_TP4_ITER, 64)
+        pool = PoolArrays.from_candidates(cands, tiers)
+        jx.select_arrays(pool, req.kv_bytes, req.input_len, view, [0] * 4)
+        t0 = time.perf_counter()
+        for _ in range(50):
+            jx.select_arrays(pool, req.kv_bytes, req.input_len, view, [0] * 4)
+        t_jax = (time.perf_counter() - t0) / 50
+        rows.append(dict(pool=n, python_ms=t_py * 1e3, jax_ms=t_jax * 1e3))
+        print(f"  sched_latency n={n}: python={t_py*1e3:.3f}ms jax={t_jax*1e3:.3f}ms")
+    write_csv("sched_latency", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    big = rows[-1]
+    emit("sched_latency", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"pool{big['pool']}:py={big['python_ms']:.2f}ms,jax={big['jax_ms']:.2f}ms")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,4 @@
+"""repro: NetKV — network-aware decode-instance selection for disaggregated
+LLM inference, as a production-grade JAX serving/training framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""Cluster substrate: fat-tree topology + flow-level network model."""
+
+from .topology import FatTree, Instance, Link, make_instances
+from .network import BackgroundTraffic, Flow, FlowNetwork, Transfer
+
+__all__ = [
+    "FatTree", "Instance", "Link", "make_instances",
+    "BackgroundTraffic", "Flow", "FlowNetwork", "Transfer",
+]

@@ -1,0 +1,239 @@
+"""Flow-level network model: per-link max-min fair sharing + ECMP (§VI-B).
+
+Each KV transfer is realised as ``n_flows`` parallel flows (one per TP shard)
+sharing the source NIC, each ECMP-hashed independently onto uplinks.  On
+every flow arrival/completion all coexisting flows on shared links are
+re-evaluated (progressive water-filling), the model RDMA congestion control
+(DCQCN) converges to.  Background traffic is a steady-state per-link
+utilisation fraction that scales down residual capacity — the mean-field
+approximation of §VI-B — optionally time-varying for the staleness and
+congestion-dynamics experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from .topology import FatTree
+
+
+class BackgroundTraffic:
+    """Per-tier offered-load fraction, optionally time-varying.
+
+    ``base[tier]`` is the mean utilisation; with ``wander > 0`` the
+    instantaneous value follows a slow sinusoid + per-refresh jitter
+    (seeded), giving the oracle something real to track in Exp. 4.
+    """
+
+    def __init__(
+        self,
+        base: dict[int, float] | float = 0.0,
+        wander: float = 0.0,
+        period: float = 7.0,
+        seed: int = 0,
+    ) -> None:
+        if isinstance(base, (int, float)):
+            base = {0: 0.0, 1: float(base), 2: float(base), 3: float(base)}
+        self.base = {t: float(base.get(t, 0.0)) for t in range(4)}
+        self.wander = wander
+        self.period = period
+        self._phase = {t: np.random.default_rng(seed + t).uniform(0, 2 * math.pi) for t in range(4)}
+
+    def util(self, tier: int, now: float) -> float:
+        u = self.base[tier]
+        if self.wander > 0.0 and u > 0.0:
+            u = u * (1.0 + self.wander * math.sin(2 * math.pi * now / self.period + self._phase[tier]))
+        return float(min(max(u, 0.0), 0.95))
+
+    def tier_map(self, now: float) -> dict[int, float]:
+        return {t: self.util(t, now) for t in range(4)}
+
+
+@dataclasses.dataclass
+class Flow:
+    flow_id: int
+    transfer: "Transfer"
+    path: tuple[int, ...]
+    bytes_remaining: float
+    rate: float = 0.0
+
+
+@dataclasses.dataclass
+class Transfer:
+    transfer_id: int
+    src: tuple[int, int, int]
+    dst: tuple[int, int, int]
+    tier: int
+    total_bytes: float
+    start_time: float
+    on_complete: Callable[["Transfer", float], None]
+    flows_open: int = 0
+    done: bool = False
+    aborted: bool = False
+    finish_time: float | None = None
+
+
+class FlowNetwork:
+    """Fluid flow simulator over the fat-tree's directed links."""
+
+    def __init__(self, tree: FatTree, background: BackgroundTraffic, seed: int = 0):
+        self.tree = tree
+        self.bg = background
+        self.rng = np.random.default_rng(seed)
+        self.flows: dict[int, Flow] = {}
+        self._next_flow = 0
+        self._next_transfer = 0
+        self._last_advance = 0.0
+        self.completed_transfers = 0
+        self.bytes_delivered = 0.0
+        self._tier_bytes = {0: 0.0, 1: 0.0, 2: 0.0, 3: 0.0}
+
+    # ------------------------------------------------------------------ API
+    def start_transfer(
+        self,
+        src: tuple[int, int, int],
+        dst: tuple[int, int, int],
+        total_bytes: float,
+        now: float,
+        on_complete: Callable[[Transfer, float], None],
+        n_flows: int = 4,
+    ) -> Transfer:
+        """Begin a KV transfer of ``total_bytes`` as n parallel shard flows."""
+        self.advance(now)
+        tier = self.tree.tier(src, dst)
+        t = Transfer(
+            self._next_transfer, src, dst, tier, total_bytes, now, on_complete
+        )
+        self._next_transfer += 1
+        if total_bytes <= 0:
+            # Pure-latency transfer (100 % prefix hit): complete immediately
+            # after base latency; caller handles via zero-byte fast path.
+            t.done = True
+            t.finish_time = now + self.tree.tier_latency[tier]
+            return t
+        per_flow = total_bytes / n_flows
+        # One ECMP hash per transfer: TP shard flows share the host pair and
+        # take the same uplinks, so the per-transfer uncontested ceiling is
+        # exactly B_tau while distinct transfers can still collide.
+        path = tuple(self.tree.flow_path(src, dst, self.rng))
+        for _ in range(n_flows):
+            f = Flow(self._next_flow, t, path, per_flow)
+            self._next_flow += 1
+            self.flows[f.flow_id] = f
+            t.flows_open += 1
+        self._recompute_rates(now)
+        return t
+
+    def abort_transfer(self, transfer: Transfer, now: float) -> None:
+        self.advance(now)
+        dead = [fid for fid, f in self.flows.items() if f.transfer is transfer]
+        for fid in dead:
+            del self.flows[fid]
+        transfer.aborted = True
+        transfer.done = True
+        if dead:
+            self._recompute_rates(now)
+
+    def advance(self, now: float) -> None:
+        """Drain bytes at current rates from the last advance point to now."""
+        dt = now - self._last_advance
+        if dt < 0:
+            raise ValueError(f"time went backwards: {self._last_advance} -> {now}")
+        if dt == 0.0 or not self.flows:
+            self._last_advance = now
+            return
+        finished: list[Flow] = []
+        for f in self.flows.values():
+            moved = min(f.bytes_remaining, f.rate * dt)
+            f.bytes_remaining -= moved
+            self.bytes_delivered += moved
+            self._tier_bytes[f.transfer.tier] += moved
+            # 1-byte completion threshold: float residue from rate*dt would
+            # otherwise strand sub-byte remainders and storm the event loop.
+            if f.bytes_remaining <= 1.0:
+                finished.append(f)
+        self._last_advance = now
+        if finished:
+            done_transfers: list[Transfer] = []
+            for f in finished:
+                del self.flows[f.flow_id]
+                f.transfer.flows_open -= 1
+                if f.transfer.flows_open == 0 and not f.transfer.aborted:
+                    f.transfer.done = True
+                    f.transfer.finish_time = now
+                    done_transfers.append(f.transfer)
+            self._recompute_rates(now)
+            for t in done_transfers:
+                self.completed_transfers += 1
+                t.on_complete(t, now)
+
+    def next_completion_time(self, now: float) -> Optional[float]:
+        """Earliest moment any flow drains at current rates (None if idle)."""
+        best = None
+        for f in self.flows.values():
+            if f.rate <= 0:
+                continue
+            eta = now + f.bytes_remaining / f.rate + 1e-9
+            if best is None or eta < best:
+                best = eta
+        return best
+
+    def refresh_rates(self, now: float) -> None:
+        """Periodic tick so time-varying background traffic takes effect."""
+        self.advance(now)
+        if self.flows:
+            self._recompute_rates(now)
+
+    # -------------------------------------------------------- water-filling
+    def _recompute_rates(self, now: float) -> None:
+        if not self.flows:
+            return
+        flows_on_link: dict[int, list[int]] = {}
+        for fid, f in self.flows.items():
+            for lid in f.path:
+                flows_on_link.setdefault(lid, []).append(fid)
+        caps = {
+            lid: self.tree.links[lid].capacity
+            * (1.0 - self.bg.util(self.tree.links[lid].tier, now))
+            for lid in flows_on_link
+        }
+        unfixed = set(self.flows.keys())
+        while unfixed:
+            bottleneck = None
+            for lid, fl in flows_on_link.items():
+                active = [fid for fid in fl if fid in unfixed]
+                if not active:
+                    continue
+                share = caps[lid] / len(active)
+                if bottleneck is None or share < bottleneck[0]:
+                    bottleneck = (share, lid, active)
+            if bottleneck is None:  # pragma: no cover - every flow has links
+                for fid in unfixed:
+                    self.flows[fid].rate = float("inf")
+                break
+            share, lid, active = bottleneck
+            for fid in active:
+                self.flows[fid].rate = share
+                unfixed.discard(fid)
+                for l2 in self.flows[fid].path:
+                    caps[l2] = max(0.0, caps.get(l2, 0.0) - share)
+            flows_on_link.pop(lid, None)
+
+    # ------------------------------------------------------------ telemetry
+    def tier_congestion(self, now: float) -> dict[int, float]:
+        """Operator-side per-tier congestion, *excluding* marked KV flows.
+
+        The scheduler's own transfers ride a dedicated DSCP class (§III-D),
+        so the operator's aggregation reports only external (background)
+        utilisation — this is exactly what keeps c_tau and n_inflight from
+        double counting.
+        """
+        return self.bg.tier_map(now)
+
+    def tier_utilization_observed(self, now: float, window_bytes: bool = False):
+        """Diagnostic: cumulative KV bytes moved per tier (for Table VI)."""
+        return dict(self._tier_bytes)

@@ -1,0 +1,202 @@
+"""Multi-tier fat-tree cluster topology (§III-A, §VI-A).
+
+The evaluation cluster: 2 pods x 2 racks x 2 servers x 8 GPUs = 64 GPUs.
+Locality tiers:
+
+  tier 0  same server   (NVLink / intra-host ICI)
+  tier 1  same rack     (NIC -> ToR -> NIC)
+  tier 2  same pod      (+ ToR uplink -> agg -> ToR downlink)
+  tier 3  cross pod     (+ agg uplink -> core -> agg downlink)
+
+Directed links are materialised for the flow-level simulator; ECMP gives
+each ToR/agg ``n_uplinks`` parallel uplinks chosen uniformly at random per
+flow (so correlated flows can collide below capacity, §VI-B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from repro.core.oracle import PAPER_TIER_BANDWIDTH, PAPER_TIER_LATENCY
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuCoord:
+    pod: int
+    rack: int
+    server: int
+    slot: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    link_id: int
+    kind: str          # "nvlink" | "nic_up" | "nic_down" | "tor_up" | "tor_down" | "agg_up" | "agg_down"
+    tier: int          # the tier whose bandwidth class this link belongs to
+    capacity: float    # bytes/s
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """A TP group: ``tp`` GPUs on one server, acting as one schedulable unit."""
+
+    instance_id: int
+    role: str           # "prefill" | "decode"
+    server: tuple[int, int, int]  # (pod, rack, server)
+    gpu_ids: tuple[int, ...]
+
+
+class FatTree:
+    def __init__(
+        self,
+        n_pods: int = 2,
+        racks_per_pod: int = 2,
+        servers_per_rack: int = 2,
+        gpus_per_server: int = 8,
+        tier_bandwidth: dict[int, float] | None = None,
+        tier_latency: dict[int, float] | None = None,
+        n_tor_uplinks: int = 8,
+        n_agg_uplinks: int = 8,
+    ) -> None:
+        self.n_pods = n_pods
+        self.racks_per_pod = racks_per_pod
+        self.servers_per_rack = servers_per_rack
+        self.gpus_per_server = gpus_per_server
+        self.tier_bandwidth = dict(tier_bandwidth or PAPER_TIER_BANDWIDTH)
+        self.tier_latency = dict(tier_latency or PAPER_TIER_LATENCY)
+        self.n_tor_uplinks = n_tor_uplinks
+        self.n_agg_uplinks = n_agg_uplinks
+
+        self.n_gpus = n_pods * racks_per_pod * servers_per_rack * gpus_per_server
+        self._coords = [self._coord_of(g) for g in range(self.n_gpus)]
+
+        # --- materialise directed links -----------------------------------
+        self.links: list[Link] = []
+        self._nic_up: dict[tuple[int, int, int], int] = {}
+        self._nic_down: dict[tuple[int, int, int], int] = {}
+        self._nvlink: dict[tuple[int, int, int], int] = {}
+        self._tor_up: dict[tuple[int, int], list[int]] = {}
+        self._tor_down: dict[tuple[int, int], list[int]] = {}
+        self._agg_up: dict[int, list[int]] = {}
+        self._agg_down: dict[int, list[int]] = {}
+
+        # Per-uplink capacity is B_tau: one transfer's shard flows share one
+        # ECMP uplink choice (they hash on the same host pair), so the
+        # per-transfer uncontested ceiling equals the cost model's B_tau,
+        # while the segment aggregate is n_uplinks * B_tau and two transfers
+        # collide on an uplink with probability 1/n_uplinks (§VI-B).
+        def add(kind: str, tier: int) -> int:
+            lid = len(self.links)
+            self.links.append(Link(lid, kind, tier, self.tier_bandwidth[tier]))
+            return lid
+
+        for p in range(n_pods):
+            for r in range(racks_per_pod):
+                for s in range(servers_per_rack):
+                    key = (p, r, s)
+                    self._nvlink[key] = add("nvlink", 0)
+                    self._nic_up[key] = add("nic_up", 1)
+                    self._nic_down[key] = add("nic_down", 1)
+                rack = (p, r)
+                self._tor_up[rack] = [add("tor_up", 2) for _ in range(n_tor_uplinks)]
+                self._tor_down[rack] = [add("tor_down", 2) for _ in range(n_tor_uplinks)]
+            self._agg_up[p] = [add("agg_up", 3) for _ in range(n_agg_uplinks)]
+            self._agg_down[p] = [add("agg_down", 3) for _ in range(n_agg_uplinks)]
+
+    # -- coordinates --------------------------------------------------------
+    def _coord_of(self, gpu: int) -> GpuCoord:
+        per_server = self.gpus_per_server
+        per_rack = per_server * self.servers_per_rack
+        per_pod = per_rack * self.racks_per_pod
+        return GpuCoord(
+            pod=gpu // per_pod,
+            rack=(gpu % per_pod) // per_rack,
+            server=(gpu % per_rack) // per_server,
+            slot=gpu % per_server,
+        )
+
+    def coord(self, gpu: int) -> GpuCoord:
+        return self._coords[gpu]
+
+    def server_of(self, gpu: int) -> tuple[int, int, int]:
+        c = self._coords[gpu]
+        return (c.pod, c.rack, c.server)
+
+    # -- tiers ---------------------------------------------------------------
+    def tier(self, a: GpuCoord | tuple[int, int, int], b: GpuCoord | tuple[int, int, int]) -> int:
+        """tau(p, d) for two servers (or GPU coords)."""
+        pa = a if isinstance(a, tuple) else (a.pod, a.rack, a.server)
+        pb = b if isinstance(b, tuple) else (b.pod, b.rack, b.server)
+        if pa == pb:
+            return 0
+        if pa[:2] == pb[:2]:
+            return 1
+        if pa[0] == pb[0]:
+            return 2
+        return 3
+
+    # -- paths (ECMP) ---------------------------------------------------------
+    def flow_path(
+        self, src: tuple[int, int, int], dst: tuple[int, int, int], rng
+    ) -> list[int]:
+        """Directed link ids traversed by one flow src-server -> dst-server.
+
+        ECMP is modelled as a uniform random uplink pick at flow start
+        (tor_up/agg_up on the source side, agg_down/tor_down on the
+        destination side), per §VI-B.
+        """
+        t = self.tier(src, dst)
+        if t == 0:
+            return [self._nvlink[src]]
+        path = [self._nic_up[src]]
+        if t >= 2:
+            path.append(self._tor_up[src[:2]][rng.integers(self.n_tor_uplinks)])
+        if t == 3:
+            path.append(self._agg_up[src[0]][rng.integers(self.n_agg_uplinks)])
+            path.append(self._agg_down[dst[0]][rng.integers(self.n_agg_uplinks)])
+        if t >= 2:
+            path.append(self._tor_down[dst[:2]][rng.integers(self.n_tor_uplinks)])
+        path.append(self._nic_down[dst])
+        return path
+
+    def base_latency(self, src, dst) -> float:
+        return self.tier_latency[self.tier(src, dst)]
+
+    def links_of_tier(self, tier: int) -> Iterator[Link]:
+        return (l for l in self.links if l.tier == tier)
+
+
+def make_instances(
+    tree: FatTree, tp: int = 4, n_prefill: int = 4, placement: str = "pack"
+) -> tuple[list[Instance], list[Instance]]:
+    """Partition the cluster into TP groups and split prefill/decode pools.
+
+    Paper setup: 64 GPUs at TP=4 -> 16 instances: 4 prefill + 12 decode.
+    TP groups never span servers (gpus_per_server % tp == 0).
+
+    placement="pack" (paper-faithful): the prefill pool fills whole racks in
+    order, so prefill never shares a server or rack with decode — Table VI's
+    footnote that tier 0 and tier 1 are unreached.  placement="spread"
+    stride-places prefill across racks (exercises tiers 0-3; used by tests).
+    """
+    assert tree.gpus_per_server % tp == 0, "TP group must fit in a server"
+    groups: list[tuple[tuple[int, int, int], tuple[int, ...]]] = []
+    for g0 in range(0, tree.n_gpus, tp):
+        gpus = tuple(range(g0, g0 + tp))
+        groups.append((tree.server_of(g0), gpus))
+    n_total = len(groups)
+    assert 0 < n_prefill < n_total
+    if placement == "pack":
+        prefill_idx = set(range(n_prefill))
+    elif placement == "spread":
+        stride = max(1, n_total // n_prefill)
+        prefill_idx = set(range(0, stride * n_prefill, stride))
+    else:
+        raise ValueError(placement)
+    prefill, decode = [], []
+    for i, (srv, gpus) in enumerate(groups):
+        role = "prefill" if i in prefill_idx else "decode"
+        inst = Instance(instance_id=i, role=role, server=srv, gpu_ids=gpus)
+        (prefill if role == "prefill" else decode).append(inst)
+    return prefill, decode

@@ -1,0 +1,6 @@
+"""Per-architecture configs (--arch <id>) + benchmark input shapes."""
+
+from .base import ArchSpec, SHAPES
+from .registry import ALL, ASSIGNED, get_spec
+
+__all__ = ["ArchSpec", "SHAPES", "ALL", "ASSIGNED", "get_spec"]

@@ -1,0 +1,109 @@
+"""ArchSpec: an assigned architecture + its training/serving knobs + the
+four benchmark input shapes as ShapeDtypeStruct factories (no allocation).
+
+Shapes (assignment):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill
+  decode_32k   seq 32,768  global_batch 128   -> decode_step (KV cache @ 32k)
+  long_500k    seq 524,288 global_batch 1     -> decode_step; SSM/hybrid only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost import ModelKVSpec
+from repro.models.model import ModelConfig, make_decode_cache, state_bytes
+
+SHAPES = {
+    "train_4k": dict(seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    model: ModelConfig
+    smoke: ModelConfig
+    source: str                           # [source; verified-tier]
+    train_microbatches: int = 16
+    optimizer: str = "adamw"              # "adamw" | "adafactor"
+    train_param_dtype: str = "float32"    # "bfloat16" for the MoE giants
+    grad_accum_dtype: str = "float32"     # "bfloat16" halves accumulator HBM
+    serve_fsdp: bool = False              # shard serving weights over data too
+    decode_cache_shard: str = "seq"       # "seq" | "heads" (seq always divides the mesh)
+    shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    skip_notes: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def kv_spec(self) -> ModelKVSpec:
+        """Simulator-side transfer-size model (Eq. 1 generalised)."""
+        m = self.model
+        fixed = state_bytes(m, 0)
+        return ModelKVSpec(
+            name=self.arch_id,
+            n_layers=m.n_layers,
+            n_kv_heads=m.n_kv_heads,
+            d_head=m.d_head,
+            bytes_per_elem=2,
+            n_attn_layers=m.n_attn_layers,
+            fixed_state_bytes=fixed,
+            tp=4,
+        )
+
+    # ------------------------------------------------------------- input specs
+    def input_specs(self, shape_name: str) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every input of the step function."""
+        if shape_name not in SHAPES:
+            raise KeyError(shape_name)
+        if shape_name not in self.shapes:
+            raise ValueError(
+                f"{self.arch_id} skips {shape_name}: "
+                f"{self.skip_notes.get(shape_name, 'not applicable')}"
+            )
+        sh = SHAPES[shape_name]
+        s, b = sh["seq_len"], sh["global_batch"]
+        m = self.model
+        i32 = jnp.int32
+        if sh["kind"] == "train":
+            batch: dict[str, Any] = {}
+            if m.is_enc_dec:
+                batch["frames"] = jax.ShapeDtypeStruct((b, s, m.d_model), jnp.bfloat16)
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+                batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            elif m.frontend == "vision":
+                npfx = m.n_prefix_embeds
+                batch["embeds"] = jax.ShapeDtypeStruct((b, npfx, m.d_model), jnp.bfloat16)
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s - npfx), i32)
+                batch["labels"] = jax.ShapeDtypeStruct((b, s - npfx), i32)
+            else:
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+                batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            return {"batch": batch}
+        if sh["kind"] == "prefill":
+            out: dict[str, Any] = {}
+            if m.is_enc_dec:
+                out["frames"] = jax.ShapeDtypeStruct((b, s, m.d_model), jnp.bfloat16)
+                out["tokens"] = jax.ShapeDtypeStruct((b, 256), i32)
+            elif m.frontend == "vision":
+                npfx = m.n_prefix_embeds
+                out["prefix_embeds"] = jax.ShapeDtypeStruct((b, npfx, m.d_model), jnp.bfloat16)
+                out["tokens"] = jax.ShapeDtypeStruct((b, s - npfx), i32)
+            else:
+                out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            return out
+        # decode
+        cache = make_decode_cache(self.model, b, s, enc_len=s if m.is_enc_dec else 0)
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache": cache,
+        }
+
+    def runnable_shapes(self) -> list[str]:
+        return list(self.shapes)

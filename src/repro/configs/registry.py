@@ -1,0 +1,29 @@
+"""Architecture registry: --arch <id> resolution."""
+
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "qwen3-14b": "qwen3_14b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "smollm-135m": "smollm_135m",
+    "internlm2-20b": "internlm2_20b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "arctic-480b": "arctic_480b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "internvl2-76b": "internvl2_76b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "rwkv6-3b": "rwkv6_3b",
+    "llama3-70b": "llama3_70b",   # the paper's own model
+}
+
+ASSIGNED = [k for k in _MODULES if k != "llama3-70b"]
+ALL = list(_MODULES)
+
+
+def get_spec(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ALL}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.SPEC

@@ -1,0 +1,55 @@
+"""NetKV core: cost model, network cost oracle, scheduler ladder."""
+
+from .cost import (
+    GBPS,
+    GiB,
+    H100_TP4_ITER,
+    H100_TP4_PREFILL,
+    IterTimeModel,
+    LLAMA3_70B_KV,
+    ModelKVSpec,
+    PrefillTimeModel,
+    effective_bandwidth,
+    effective_transfer_bytes,
+    first_decode_time,
+    post_prefill_latency,
+    queue_time,
+    transfer_time,
+)
+from .oracle import (
+    EWMACongestionPredictor,
+    NetworkCostOracle,
+    OracleView,
+    PAPER_TIER_BANDWIDTH,
+    PAPER_TIER_LATENCY,
+    SelfContentionTracker,
+    TransferIntent,
+    TIERS,
+)
+from .schedulers import (
+    CandidateState,
+    CacheAware,
+    CacheLoadAware,
+    Decision,
+    LADDER,
+    LoadAware,
+    NetKVFull,
+    NetKVPredictive,
+    NetKVStatic,
+    NetKVTopoOnly,
+    RequestInfo,
+    RoundRobin,
+    Scheduler,
+    make_scheduler,
+)
+from .batch_assign import NetKVBatch
+from .propositions import (
+    Prop1Instance,
+    prop1_condition,
+    prop1_latencies,
+    prop1_rhs,
+    prop2_epsilon_bound,
+    prop2_ordering_preserved,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,116 @@
+"""Beyond-paper: batch-level joint decode-instance assignment.
+
+The paper's §VII-C lists as future work: "the per-request greedy does not
+jointly optimise across concurrent requests; a batch-level formulation could
+yield better results at higher computational cost."  This module implements
+that formulation.
+
+Requests that arrive within an assignment window W (default 10 ms) are
+assigned *jointly*: we run a regret-minimising greedy over the
+(request x candidate) cost matrix that re-evaluates marginal costs after each
+commitment, so two same-window requests from one prefill instance are not
+both sent down the same tier at its pre-dispatch n_inflight, and queue growth
+on a popular decode instance is charged to later assignments.
+
+This is the classic auction/regret heuristic for the assignment problem: it
+is O(W^2 |D|) per window instead of O(|D|) per request, matching the paper's
+"higher computational cost" caveat, and it strictly generalises Algorithm 1
+(window of 1 == NetKV-Full).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .cost import transfer_time
+from .oracle import OracleView, SelfContentionTracker
+from .schedulers import CandidateState, Decision, NetKVFull, RequestInfo
+
+
+class NetKVBatch(NetKVFull):
+    name = "netkv-batch"
+
+    def __init__(self, *args, window: float = 0.010, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.window = window
+
+    # Single-request path stays Alg. 1 (used when the window holds 1 request).
+    def select_batch(
+        self,
+        reqs: Sequence[tuple[RequestInfo, int]],
+        cands_per_req: Sequence[Sequence[CandidateState]],
+        oracle: OracleView,
+        inflight: Optional[SelfContentionTracker] = None,
+    ) -> list[Optional[Decision]]:
+        """Jointly assign a window of (request, prefill_id) pairs.
+
+        ``cands_per_req[i]`` is request i's view of the pool (hit_tokens is
+        request-specific; load/memory state is shared and virtualised below).
+        Returns one Decision (or None = reject) per input, in input order.
+        """
+        n = len(reqs)
+        assert len(cands_per_req) == n
+        out: list[Optional[Decision]] = [None] * n
+        # Virtual shared state we mutate as we commit assignments.
+        vstate = {
+            c.instance_id: [c.free_memory, c.queued, c.batch_size]
+            for c in cands_per_req[0]
+        }
+        vinflight: dict[tuple[int, int], int] = {}
+        remaining = list(range(n))
+
+        def marginal_cost(i: int, c: CandidateState):
+            req, pid = reqs[i]
+            if c.instance_id not in vstate:
+                vstate[c.instance_id] = [c.free_memory, c.queued, c.batch_size]
+            free, queued, beta = vstate[c.instance_id]
+            s_eff = self._s_eff(req, c)
+            if not c.healthy or free < s_eff + self.m_min:
+                return None
+            tier = oracle.tier_of(pid, c.instance_id)
+            n_in = (inflight.get(pid, tier) if inflight is not None else 0) + vinflight.get(
+                (pid, tier), 0
+            )
+            cong = oracle.congestion.get(tier, 0.0)
+            t_x = transfer_time(
+                s_eff, oracle.tier_bandwidth[tier], cong, n_in, oracle.tier_latency[tier]
+            )
+            vq = CandidateState(
+                c.instance_id, free, queued, beta, c.hit_tokens, c.healthy, c.iter_scale
+            )
+            cost = t_x + self._t_queue(vq) + self._t_decode(vq)
+            return cost, t_x, tier, s_eff
+
+        while remaining:
+            # Regret-minimising pick: commit the request whose best-vs-second
+            # gap is largest (it has the most to lose from waiting).
+            best_pick = None  # (neg_regret, i, (cost, t_x, tier, s_eff, cid))
+            for i in remaining:
+                scored = []
+                for c in cands_per_req[i]:
+                    mc = marginal_cost(i, c)
+                    if mc is not None:
+                        scored.append((mc[0], c.instance_id, mc))
+                if not scored:
+                    continue
+                scored.sort()
+                best = scored[0]
+                regret = (scored[1][0] - best[0]) if len(scored) > 1 else float("inf")
+                entry = (-regret, best[0], i, best)
+                if best_pick is None or entry < best_pick:
+                    best_pick = entry
+            if best_pick is None:
+                break  # everything left is infeasible
+            _, _, i, (cost, cid, (c_cost, t_x, tier, s_eff)) = best_pick
+            req, pid = reqs[i]
+            # Commit: mutate virtual state so later picks see the consequences.
+            vstate[cid][0] -= s_eff
+            vstate[cid][2] = min(vstate[cid][2] + 1, self.beta_max)
+            if vstate[cid][2] >= self.beta_max:
+                vstate[cid][1] += 1
+            vinflight[(pid, tier)] = vinflight.get((pid, tier), 0) + 1
+            if inflight is not None:
+                inflight.incr(pid, tier)
+            out[i] = Decision(cid, c_cost, t_x, tier, s_eff)
+            remaining.remove(i)
+        return out

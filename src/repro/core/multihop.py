@@ -1,0 +1,169 @@
+"""Beyond-paper: multi-hop KV routing through DRAM staging caches (§VII-D).
+
+The paper's future-work sketch: "Multi-hop KV routing extends NetKV to
+architectures that stage KV state through intermediate caches in CPU DRAM
+or SSDs: the oracle exposes tier information for both hops and the cost
+model sums the two transfer times, with the greedy generalising naturally."
+
+Implementation: a cluster hosts ``StagingStore`` nodes (CPU-DRAM block
+caches, Mooncake-style).  For a request whose prefix blocks live in a store,
+NetKV-MultiHop scores each decode candidate d over the best *plan*:
+
+  direct:            T(p -> d, s_eff)
+  staged(s):         max( T(s -> d, s_hit),  T(p -> d, s_miss) )   [parallel]
+
+where s_hit is the portion of the payload resident in store s (fetched over
+the s->d path at the store's DRAM-capped bandwidth) and s_miss is the
+remainder that must still come from the prefill instance.  Completed
+transfers populate the stores (write-through), so hot shared prefixes
+migrate close to every pod — cutting cross-pod bytes beyond what
+decode-local prefix caches can.
+
+Cost arithmetic reuses Eqs. (2)-(4) per hop; Prop. 2's staleness tolerance
+applies hop-wise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from .cost import effective_bandwidth, transfer_time
+from .oracle import OracleView, SelfContentionTracker
+from .schedulers import CandidateState, Decision, NetKVFull, RequestInfo
+
+
+@dataclasses.dataclass
+class StagingStore:
+    """CPU-DRAM block cache on a host (instance-id addressable)."""
+
+    node_id: int
+    capacity_bytes: float
+    dram_bw: float = 40e9          # sustained DRAM->NIC read bandwidth
+    bytes_per_block: float = 16 * 320 * 1024 / 4
+
+    def __post_init__(self):
+        from collections import OrderedDict
+
+        self._lru: "OrderedDict" = OrderedDict()
+
+    @property
+    def bytes_used(self) -> float:
+        return len(self._lru) * self.bytes_per_block
+
+    def hit_blocks(self, hashes: Sequence) -> int:
+        n = 0
+        for h in hashes:
+            if h in self._lru:
+                n += 1
+            else:
+                break
+        return n
+
+    def insert(self, hashes: Sequence) -> None:
+        for h in hashes:
+            self._lru[h] = None
+            self._lru.move_to_end(h)
+        while self.bytes_used > self.capacity_bytes and self._lru:
+            self._lru.popitem(last=False)
+
+
+@dataclasses.dataclass
+class HopPlan:
+    kind: str                     # "direct" | "staged"
+    store_id: int = -1
+    t_xfer: float = 0.0
+    staged_bytes: float = 0.0
+    direct_bytes: float = 0.0
+
+
+class NetKVMultiHop(NetKVFull):
+    """NetKV-Full + staged-fetch planning over DRAM KV stores."""
+
+    name = "netkv-multihop"
+
+    def __init__(self, *args, stores: Sequence[StagingStore] = (),
+                 block_tokens: int = 16, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.stores = list(stores)
+        self.block_tokens = block_tokens
+        self._req_hashes: Sequence = ()
+        self.plans: dict[int, HopPlan] = {}
+        # Self-contention on the store's egress NIC — the same idea the
+        # paper applies to prefill NICs (n_inflight^tau), hop-wise.
+        self.store_inflight: dict[int, int] = {}
+
+    def observe_request(self, block_hashes: Sequence) -> None:
+        """Simulator hook: the current request's block-hash sequence."""
+        self._req_hashes = tuple(block_hashes)
+
+    def _plan(self, req: RequestInfo, cand: CandidateState, prefill_id: int,
+              oracle: OracleView, inflight) -> HopPlan:
+        t_direct, tier, s_eff = self._xfer(req, cand, prefill_id, oracle, inflight)
+        best = HopPlan("direct", t_xfer=t_direct, direct_bytes=s_eff)
+        if s_eff <= 0 or not self._req_hashes:
+            return best
+        bytes_per_tok = req.kv_bytes / max(req.input_len, 1)
+        # Tokens already on the decode candidate are not refetched from
+        # anywhere; staging competes only for the remainder.
+        for store in self.stores:
+            hit_blocks = store.hit_blocks(self._req_hashes)
+            hit_tokens = min(hit_blocks * self.block_tokens, req.input_len)
+            extra = max(hit_tokens - cand.hit_tokens, 0.0)
+            if extra <= 0:
+                continue
+            staged_bytes = extra * bytes_per_tok
+            direct_bytes = max(s_eff - staged_bytes, 0.0)
+            s_tier = oracle.tier_of(store.node_id, cand.instance_id)
+            c = self._congestion(oracle, s_tier)
+            bw = min(oracle.tier_bandwidth[s_tier], store.dram_bw)
+            n_store = self.store_inflight.get(store.node_id, 0)
+            t_staged_leg = transfer_time(staged_bytes, bw, c, n_store,
+                                         oracle.tier_latency[s_tier])
+            p_tier = oracle.tier_of(prefill_id, cand.instance_id)
+            t_direct_leg = transfer_time(
+                direct_bytes, oracle.tier_bandwidth[p_tier],
+                self._congestion(oracle, p_tier),
+                self._n_inflight(inflight, prefill_id, p_tier),
+                oracle.tier_latency[p_tier],
+            )
+            t = max(t_staged_leg, t_direct_leg)  # parallel fetch
+            if t < best.t_xfer:
+                best = HopPlan("staged", store.node_id, t, staged_bytes,
+                               direct_bytes)
+        return best
+
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        feas = self.feasible(req, cands)
+        if not feas:
+            return None
+        best_c, best_plan, best_cost, best_tie = None, None, float("inf"), 2.0
+        for c in feas:
+            plan = self._plan(req, c, prefill_id, oracle, inflight)
+            cost = plan.t_xfer + self._t_queue(c) + self._t_decode(c)
+            tie = self._tie()
+            if cost < best_cost or (cost == best_cost and tie < best_tie):
+                best_c, best_plan, best_cost, best_tie = c, plan, cost, tie
+        assert best_c is not None
+        tier = oracle.tier_of(prefill_id, best_c.instance_id)
+        if inflight is not None and best_plan.kind == "direct":
+            inflight.incr(prefill_id, tier)
+        if best_plan.kind == "staged":
+            self.store_inflight[best_plan.store_id] =                 self.store_inflight.get(best_plan.store_id, 0) + 1
+        self.plans[req.request_id] = best_plan
+        s_eff = self._s_eff(req, best_c)
+        d = Decision(best_c.instance_id, best_cost, best_plan.t_xfer, tier, s_eff)
+        return d
+
+    def on_transfer_complete(self, block_hashes: Sequence, store_id: int | None = None):
+        """Write-through: landed prefixes populate the (nearest) store."""
+        targets = [s for s in self.stores if store_id is None or s.node_id == store_id]
+        for s in targets:
+            s.insert(block_hashes)
+
+    def staged_leg_done(self, store_id: int) -> None:
+        cur = self.store_inflight.get(store_id, 0)
+        if cur > 1:
+            self.store_inflight[store_id] = cur - 1
+        else:
+            self.store_inflight.pop(store_id, None)

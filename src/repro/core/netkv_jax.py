@@ -1,0 +1,126 @@
+"""Vectorised NetKV scorer in JAX.
+
+Algorithm 1's per-candidate loop (lines 3-13) as a single fused jit
+computation over candidate arrays.  At 1000+ node scale the Python loop is
+the scheduler's hot path (the paper reports 1.5 ms per decision at 1024
+GPUs); this version scores tens of thousands of candidates in microseconds
+and is the entry point the Pallas ``netkv_score`` kernel accelerates further.
+
+The arithmetic is bit-identical to ``repro.core.cost`` (the reference oracle
+for both this module and the kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .schedulers import CandidateState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PoolArrays:
+    """Struct-of-arrays snapshot of the decode pool."""
+
+    free_memory: jax.Array   # (D,) f32 bytes
+    queued: jax.Array        # (D,) i32
+    batch: jax.Array         # (D,) i32
+    hit_tokens: jax.Array    # (D,) f32
+    tier: jax.Array          # (D,) i32 in {0..3}
+    healthy: jax.Array       # (D,) bool
+    iter_scale: jax.Array    # (D,) f32
+
+    @staticmethod
+    def from_candidates(cands, tiers) -> "PoolArrays":
+        return PoolArrays(
+            free_memory=jnp.asarray([c.free_memory for c in cands], jnp.float32),
+            queued=jnp.asarray([c.queued for c in cands], jnp.int32),
+            batch=jnp.asarray([c.batch_size for c in cands], jnp.int32),
+            hit_tokens=jnp.asarray([c.hit_tokens for c in cands], jnp.float32),
+            tier=jnp.asarray(list(tiers), jnp.int32),
+            healthy=jnp.asarray([c.healthy for c in cands], bool),
+            iter_scale=jnp.asarray([c.iter_scale for c in cands], jnp.float32),
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("beta_max",))
+def score_pool(
+    pool: PoolArrays,
+    kv_bytes: jax.Array,      # scalar f32: s_r
+    input_len: jax.Array,     # scalar f32: l_r
+    tier_bw: jax.Array,       # (4,) f32 bytes/s
+    tier_lat: jax.Array,      # (4,) f32 s
+    congestion: jax.Array,    # (4,) f32
+    n_inflight: jax.Array,    # (4,) i32 for this prefill instance
+    iter_a: jax.Array,
+    iter_b: jax.Array,
+    m_min: jax.Array,
+    *,
+    beta_max: int,
+):
+    """Return (costs, best_idx): Eq. (5) per candidate, +inf if infeasible."""
+    hit = jnp.minimum(pool.hit_tokens, input_len)
+    s_eff = kv_bytes * (1.0 - hit / jnp.maximum(input_len, 1.0))          # Eq. (2)
+    beff = (
+        tier_bw[pool.tier]
+        * (1.0 - congestion[pool.tier])
+        / (1.0 + n_inflight[pool.tier].astype(jnp.float32))
+    )                                                                      # Eq. (4)
+    t_xfer = s_eff / beff + tier_lat[pool.tier]                            # Eq. (3)
+    t_iter = (iter_a + iter_b * pool.batch.astype(jnp.float32)) * pool.iter_scale
+    blocked = jnp.maximum(0, pool.queued - (beta_max - pool.batch))
+    t_queue = blocked.astype(jnp.float32) * t_iter                        # Eq. (6)
+    t_dec = (iter_a + iter_b * (pool.batch + 1).astype(jnp.float32)) * pool.iter_scale  # Eq. (7)
+    cost = t_xfer + t_queue + t_dec                                        # Eq. (5)
+    feasible = pool.healthy & (pool.free_memory >= s_eff + m_min)
+    cost = jnp.where(feasible, cost, jnp.inf)
+    return cost, jnp.argmin(cost)
+
+
+# Batched variant: R requests against the same pool snapshot (the window the
+# batch-level assigner scores in one shot before its sequential commits).
+score_pool_batched = jax.jit(
+    jax.vmap(
+        score_pool,
+        in_axes=(None, 0, 0, None, None, None, 0, None, None, None),
+        axis_name="req",
+    ),
+    static_argnames=("beta_max",),
+)
+
+
+class JaxNetKV:
+    """Drop-in NetKV-Full whose argmin runs under jit (same decisions)."""
+
+    name = "netkv-jax"
+
+    def __init__(self, iter_model, beta_max: int, m_min: float = 2 * 1024**3):
+        self.iter_model = iter_model
+        self.beta_max = beta_max
+        self.m_min = m_min
+
+    def select_arrays(self, pool: PoolArrays, req_kv_bytes, req_len, oracle_view,
+                      n_inflight_by_tier):
+        costs, idx = score_pool(
+            pool,
+            jnp.float32(req_kv_bytes),
+            jnp.float32(req_len),
+            jnp.asarray(oracle_view.bandwidth_array(), jnp.float32),
+            jnp.asarray(oracle_view.latency_array(), jnp.float32),
+            jnp.asarray(oracle_view.congestion_array(), jnp.float32),
+            jnp.asarray(n_inflight_by_tier, jnp.int32),
+            jnp.float32(self.iter_model.a),
+            jnp.float32(self.iter_model.b),
+            jnp.float32(self.m_min),
+            beta_max=self.beta_max,
+        )
+        idx = int(idx)
+        cost = float(costs[idx])
+        if not np.isfinite(cost):
+            return None, costs
+        return idx, costs

@@ -1,0 +1,183 @@
+"""The network cost oracle — the operator→scheduler interface (§III-E).
+
+The operator publishes four maps every ``refresh_interval`` seconds:
+
+  * ``tier_map``        static: (instance, instance) -> tier id in {0,1,2,3}
+  * ``tier_bandwidth``  static: tier -> bytes/s
+  * ``tier_latency``    static: tier -> seconds
+  * ``congestion``      dynamic: tier -> [0, 1)
+
+The scheduler reads a *snapshot* (``OracleView``) that is immutable between
+refreshes — this is exactly the staleness regime analysed by Proposition 2.
+Optionally the scheduler sends ``TransferIntent`` hints back to the operator.
+
+The oracle is deliberately tiny: tier classification + per-tier scalars.  It
+carries no raw topology, no per-link state, and no inference semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+TIERS = (0, 1, 2, 3)
+
+# Paper defaults (§VI-A): B0=450 GB/s NVLink, B1=100 Gbps ToR,
+# B2=50 Gbps (2:1 oversub), B3=25 Gbps (4:1 oversub).
+PAPER_TIER_BANDWIDTH = {
+    0: 450e9,            # bytes/s (NVLink)
+    1: 100e9 / 8,        # 100 Gbps
+    2: 50e9 / 8,         # 50 Gbps
+    3: 25e9 / 8,         # 25 Gbps
+}
+PAPER_TIER_LATENCY = {0: 1e-6, 1: 3e-6, 2: 8e-6, 3: 15e-6}
+
+# TPU-fabric preset (see DESIGN.md §3): intra-host ICI / slice ICI /
+# intra-pod DCN / cross-pod DCN.
+TPU_TIER_BANDWIDTH = {0: 400e9, 1: 50e9, 2: 25e9 / 8 * 4, 3: 25e9 / 8}
+TPU_TIER_LATENCY = {0: 1e-6, 1: 5e-6, 2: 10e-6, 3: 25e-6}
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleView:
+    """Immutable snapshot consumed by the scheduler between refreshes."""
+
+    tier_of: Callable[[int, int], int]
+    tier_bandwidth: Mapping[int, float]
+    tier_latency: Mapping[int, float]
+    congestion: Mapping[int, float]
+    timestamp: float = 0.0
+
+    def bandwidth_array(self) -> np.ndarray:
+        return np.array([self.tier_bandwidth[t] for t in TIERS], dtype=np.float64)
+
+    def latency_array(self) -> np.ndarray:
+        return np.array([self.tier_latency[t] for t in TIERS], dtype=np.float64)
+
+    def congestion_array(self) -> np.ndarray:
+        return np.array([self.congestion.get(t, 0.0) for t in TIERS], dtype=np.float64)
+
+
+@dataclasses.dataclass
+class TransferIntent:
+    """Optional scheduler→operator hint for an upcoming KV flow."""
+
+    src: int
+    dst: int
+    bytes: int
+    priority: int = 0
+    deadline: float | None = None
+
+
+class NetworkCostOracle:
+    """Operator-side oracle with a refresh clock.
+
+    ``telemetry_fn(now) -> {tier: congestion}`` is the operator's aggregation
+    of switch counters (INT/sFlow/SNMP), *excluding* the scheduler's own
+    marked KV flows (DSCP class), per §III-D.  The scheduler only ever sees
+    the last published snapshot.
+    """
+
+    def __init__(
+        self,
+        tier_of: Callable[[int, int], int],
+        tier_bandwidth: Mapping[int, float] | None = None,
+        tier_latency: Mapping[int, float] | None = None,
+        telemetry_fn: Callable[[float], Mapping[int, float]] | None = None,
+        refresh_interval: float = 1.0,
+    ) -> None:
+        self.tier_of = tier_of
+        self.tier_bandwidth = dict(tier_bandwidth or PAPER_TIER_BANDWIDTH)
+        self.tier_latency = dict(tier_latency or PAPER_TIER_LATENCY)
+        self._telemetry_fn = telemetry_fn or (lambda now: {t: 0.0 for t in TIERS})
+        self.refresh_interval = refresh_interval
+        self._last_refresh = -float("inf")
+        self._snapshot: OracleView | None = None
+        self.intents: list[TransferIntent] = []
+        self.refreshes = 0
+
+    def view(self, now: float) -> OracleView:
+        """Return the current snapshot, refreshing if the interval elapsed."""
+        if self._snapshot is None or now - self._last_refresh >= self.refresh_interval:
+            congestion = {t: float(np.clip(c, 0.0, 0.999)) for t, c in self._telemetry_fn(now).items()}
+            for t in TIERS:
+                congestion.setdefault(t, 0.0)
+            self._snapshot = OracleView(
+                tier_of=self.tier_of,
+                tier_bandwidth=self.tier_bandwidth,
+                tier_latency=self.tier_latency,
+                congestion=congestion,
+                timestamp=now,
+            )
+            self._last_refresh = now
+            self.refreshes += 1
+        return self._snapshot
+
+    def submit_intent(self, intent: TransferIntent) -> None:
+        self.intents.append(intent)
+
+
+class SelfContentionTracker:
+    """n_inflight^tau(p): the scheduler's own in-flight flows per (p, tier).
+
+    Incremented on dispatch, decremented via the engine's transfer-complete
+    callback (vLLM ``KVConnectorBase_V1.get_finished`` equivalent).  Capped
+    (default 16 ~ NIC saturated flow count) to avoid runaway under overload.
+    """
+
+    def __init__(self, cap: int = 16) -> None:
+        self.cap = cap
+        self._counts: dict[tuple[int, int], int] = {}
+
+    def get(self, prefill_id: int, tier: int) -> int:
+        return self._counts.get((prefill_id, tier), 0)
+
+    def incr(self, prefill_id: int, tier: int) -> None:
+        key = (prefill_id, tier)
+        self._counts[key] = min(self.cap, self._counts.get(key, 0) + 1)
+
+    def decr(self, prefill_id: int, tier: int) -> None:
+        key = (prefill_id, tier)
+        cur = self._counts.get(key, 0)
+        if cur <= 1:
+            self._counts.pop(key, None)
+        else:
+            self._counts[key] = cur - 1
+
+    def snapshot(self, prefill_id: int) -> dict[int, int]:
+        return {t: self.get(prefill_id, t) for t in TIERS}
+
+
+class EWMACongestionPredictor:
+    """Beyond-paper: predictive congestion via exponential smoothing (§VII-D).
+
+    Replaces the instantaneous snapshot with a one-step-ahead forecast
+    ``c_hat = alpha * obs + (1 - alpha) * c_hat`` plus a trend term
+    (Holt's linear method, damped).  Prop. 2's large staleness tolerance is
+    what makes this safe: a modest forecast error never flips tier order.
+    """
+
+    def __init__(self, alpha: float = 0.4, beta: float = 0.2, damp: float = 0.9) -> None:
+        self.alpha, self.beta, self.damp = alpha, beta, damp
+        self._level: dict[int, float] = {}
+        self._trend: dict[int, float] = {}
+
+    def update(self, congestion: Mapping[int, float]) -> None:
+        for t, obs in congestion.items():
+            lvl = self._level.get(t)
+            if lvl is None:
+                self._level[t], self._trend[t] = float(obs), 0.0
+                continue
+            trend = self._trend.get(t, 0.0)
+            new_level = self.alpha * float(obs) + (1 - self.alpha) * (lvl + self.damp * trend)
+            self._trend[t] = self.beta * (new_level - lvl) + (1 - self.beta) * self.damp * trend
+            self._level[t] = new_level
+
+    def predict(self, tier: int) -> float:
+        lvl = self._level.get(tier, 0.0) + self.damp * self._trend.get(tier, 0.0)
+        return float(np.clip(lvl, 0.0, 0.999))
+
+    def predicted_map(self, tiers: Sequence[int] = TIERS) -> dict[int, float]:
+        return {t: self.predict(t) for t in tiers}

@@ -1,0 +1,318 @@
+"""Decode-instance selection policies (Algorithm 1 + the baseline ladder).
+
+Every policy is a *scorer plugin* with the same call signature, mirroring the
+paper's deployment story (llm-d Endpoint Picker scorer chain / Dynamo KV
+router scoring fn).  The ladder, in ablation order (§VI-H):
+
+  RoundRobin        -> no signal
+  LoadAware         -> T_queue + T_decode
+  CacheAware        -> max prefix hit, load tiebreak
+  CacheLoadAware    -> tuned w_cache/w_load composite (Mooncake Conductor /
+                       llm-d composite scorer equivalent; "CLA*")
+  NetKVTopoOnly     -> CLA* + static tier map (B_tau, L_tau)
+  NetKVStatic       -> + self-contention counter n_inflight^tau(p)
+  NetKVFull         -> + dynamic congestion c_tau (Algorithm 1 complete)
+  NetKVPredictive   -> beyond paper: EWMA one-step congestion forecast
+  NetKVBatch        -> beyond paper: batch-level joint assignment (§VII-C
+                       'future work'), see batch_assign.py
+
+All policies share the same feasibility filter (line 1 of Alg. 1) and return
+``None`` to signal rejection (line 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .cost import (
+    IterTimeModel,
+    effective_bandwidth,
+    effective_transfer_bytes,
+    first_decode_time,
+    queue_time,
+    transfer_time,
+)
+from .oracle import OracleView, SelfContentionTracker, EWMACongestionPredictor
+
+
+@dataclasses.dataclass
+class CandidateState:
+    """Scheduler-visible state of one decode instance (§III-C)."""
+
+    instance_id: int
+    free_memory: float          # m_d, bytes
+    queued: int                 # q_d
+    batch_size: int             # beta_d
+    hit_tokens: float           # lambda_r(d) for the *current* request
+    healthy: bool = True
+    iter_scale: float = 1.0     # straggler EWMA multiplier (1.0 = nominal)
+
+
+@dataclasses.dataclass
+class RequestInfo:
+    """What the scheduler knows about a request at selection time."""
+
+    request_id: int
+    input_len: int
+    kv_bytes: float             # s_r (Eq. 1), aggregate across TP shards
+
+
+@dataclasses.dataclass
+class Decision:
+    instance_id: int
+    cost: float                 # policy-internal score of the winner
+    est_transfer_time: float    # seconds, 0 for network-oblivious policies
+    tier: int
+    s_eff: float                # effective bytes to move
+
+
+class Scheduler:
+    """Base: feasibility filter + shared component models."""
+
+    name = "base"
+    uses_tier = False            # static tier map
+    uses_self_contention = False
+    uses_congestion = False
+
+    def __init__(self, iter_model: IterTimeModel, beta_max: int, m_min: float = 2 * 1024**3,
+                 seed: int = 0):
+        self.iter_model = iter_model
+        self.beta_max = beta_max
+        self.m_min = m_min
+        # Unbiased deterministic tie-breaking: scoring ties must not collapse
+        # onto low instance ids (that would topology-bias network-oblivious
+        # policies, since ids order pods).
+        self._rng = np.random.default_rng(seed + 0xC0FFEE)
+
+    def _tie(self) -> float:
+        return float(self._rng.random())
+
+    # -- shared helpers -----------------------------------------------------
+    def _s_eff(self, req: RequestInfo, cand: CandidateState) -> float:
+        return effective_transfer_bytes(req.kv_bytes, cand.hit_tokens, req.input_len)
+
+    def feasible(self, req: RequestInfo, cands: Sequence[CandidateState]):
+        return [
+            c for c in cands
+            if c.healthy and c.free_memory >= self._s_eff(req, c) + self.m_min
+        ]
+
+    def _t_queue(self, cand: CandidateState) -> float:
+        return cand.iter_scale * queue_time(
+            cand.queued, cand.batch_size, self.beta_max, self.iter_model
+        )
+
+    def _t_decode(self, cand: CandidateState) -> float:
+        return cand.iter_scale * first_decode_time(cand.batch_size, self.iter_model)
+
+    def _xfer(
+        self,
+        req: RequestInfo,
+        cand: CandidateState,
+        prefill_id: int,
+        oracle: OracleView,
+        inflight: Optional[SelfContentionTracker],
+    ) -> tuple[float, int, float]:
+        """(T_xfer, tier, s_eff) under this policy's information set."""
+        tier = oracle.tier_of(prefill_id, cand.instance_id)
+        s_eff = self._s_eff(req, cand)
+        c = self._congestion(oracle, tier)
+        n = self._n_inflight(inflight, prefill_id, tier)
+        t = transfer_time(
+            s_eff, oracle.tier_bandwidth[tier], c, n, oracle.tier_latency[tier]
+        )
+        return t, tier, s_eff
+
+    def _congestion(self, oracle: OracleView, tier: int) -> float:
+        return oracle.congestion.get(tier, 0.0) if self.uses_congestion else 0.0
+
+    def _n_inflight(
+        self, inflight: Optional[SelfContentionTracker], prefill_id: int, tier: int
+    ) -> int:
+        if self.uses_self_contention and inflight is not None:
+            return inflight.get(prefill_id, tier)
+        return 0
+
+    # -- interface ----------------------------------------------------------
+    def select(
+        self,
+        req: RequestInfo,
+        prefill_id: int,
+        cands: Sequence[CandidateState],
+        oracle: OracleView,
+        inflight: Optional[SelfContentionTracker] = None,
+    ) -> Optional[Decision]:
+        raise NotImplementedError
+
+
+class RoundRobin(Scheduler):
+    name = "rr"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._next = 0
+
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        feas = self.feasible(req, cands)
+        if not feas:
+            return None
+        feas.sort(key=lambda c: c.instance_id)
+        cand = feas[self._next % len(feas)]
+        self._next += 1
+        tier = oracle.tier_of(prefill_id, cand.instance_id)
+        return Decision(cand.instance_id, 0.0, 0.0, tier, self._s_eff(req, cand))
+
+
+class LoadAware(Scheduler):
+    """min T_queue + T_decode."""
+
+    name = "la"
+
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        feas = self.feasible(req, cands)
+        if not feas:
+            return None
+        best = min(feas, key=lambda c: (self._t_queue(c) + self._t_decode(c), self._tie()))
+        tier = oracle.tier_of(prefill_id, best.instance_id)
+        return Decision(
+            best.instance_id,
+            self._t_queue(best) + self._t_decode(best),
+            0.0,
+            tier,
+            self._s_eff(req, best),
+        )
+
+
+class CacheAware(Scheduler):
+    """max prefix hit length, load as tiebreaker."""
+
+    name = "ca"
+
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        feas = self.feasible(req, cands)
+        if not feas:
+            return None
+        best = min(
+            feas,
+            key=lambda c: (-c.hit_tokens, self._t_queue(c) + self._t_decode(c), self._tie()),
+        )
+        tier = oracle.tier_of(prefill_id, best.instance_id)
+        return Decision(best.instance_id, -best.hit_tokens, 0.0, tier, self._s_eff(req, best))
+
+
+class CacheLoadAware(Scheduler):
+    """CLA*: w_cache * miss_frac + w_load * normalised load (tuned weights).
+
+    Matches the scoring component of Mooncake's Conductor and llm-d's
+    composite scorer; weights per workload from a grid search (§VI-A).
+    """
+
+    name = "cla"
+
+    def __init__(self, *args, w_cache: float = 1.0, w_load: float = 1.0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.w_cache = w_cache
+        self.w_load = w_load
+
+    def _score(self, req: RequestInfo, cand: CandidateState) -> float:
+        miss = 1.0 - min(cand.hit_tokens, req.input_len) / max(req.input_len, 1)
+        load = (self._t_queue(cand) + self._t_decode(cand)) / self.iter_model(self.beta_max)
+        return self.w_cache * miss + self.w_load * load
+
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        feas = self.feasible(req, cands)
+        if not feas:
+            return None
+        best = min(feas, key=lambda c: (self._score(req, c), self._tie()))
+        tier = oracle.tier_of(prefill_id, best.instance_id)
+        return Decision(
+            best.instance_id, self._score(req, best), 0.0, tier, self._s_eff(req, best)
+        )
+
+
+class NetKVFull(Scheduler):
+    """Algorithm 1: C[d] = T_xfer + T_queue + T_decode, full oracle."""
+
+    name = "netkv-full"
+    uses_tier = True
+    uses_self_contention = True
+    uses_congestion = True
+
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        feas = self.feasible(req, cands)
+        if not feas:
+            return None
+        best, best_cost, best_x, best_tier, best_seff = None, float("inf"), 0.0, 0, 0.0
+        best_tie = 2.0
+        for c in feas:
+            t_x, tier, s_eff = self._xfer(req, c, prefill_id, oracle, inflight)
+            cost = t_x + self._t_queue(c) + self._t_decode(c)
+            tie = self._tie()
+            if cost < best_cost or (cost == best_cost and tie < best_tie):
+                best, best_cost, best_x, best_tier, best_seff = c, cost, t_x, tier, s_eff
+                best_tie = tie
+        assert best is not None
+        if inflight is not None:
+            inflight.incr(prefill_id, best_tier)  # line 14; decremented on done
+        return Decision(best.instance_id, best_cost, best_x, best_tier, best_seff)
+
+
+class NetKVStatic(NetKVFull):
+    """Static tier map + self-contention, congestion withheld ('+Self-cont.')."""
+
+    name = "netkv-static"
+    uses_congestion = False
+
+
+class NetKVTopoOnly(NetKVFull):
+    """Static tier map only ('+Static' ablation rung)."""
+
+    name = "netkv-topo"
+    uses_self_contention = False
+    uses_congestion = False
+
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        # No n_inflight bookkeeping at all on this rung.
+        d = super().select(req, prefill_id, cands, oracle, inflight=None)
+        return d
+
+
+class NetKVPredictive(NetKVFull):
+    """Beyond paper: consume an EWMA forecast instead of the raw snapshot."""
+
+    name = "netkv-pred"
+
+    def __init__(self, *args, predictor: EWMACongestionPredictor | None = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.predictor = predictor or EWMACongestionPredictor()
+
+    def _congestion(self, oracle: OracleView, tier: int) -> float:
+        self.predictor.update(oracle.congestion)
+        return self.predictor.predict(tier)
+
+
+LADDER = {
+    "rr": RoundRobin,
+    "la": LoadAware,
+    "ca": CacheAware,
+    "cla": CacheLoadAware,
+    "netkv-topo": NetKVTopoOnly,
+    "netkv-static": NetKVStatic,
+    "netkv-full": NetKVFull,
+    "netkv-pred": NetKVPredictive,
+}
+
+
+def make_scheduler(name: str, iter_model: IterTimeModel, beta_max: int, **kw) -> Scheduler:
+    try:
+        cls = LADDER[name]
+    except KeyError:
+        from .batch_assign import NetKVBatch  # cycle-free late import
+
+        if name == "netkv-batch":
+            return NetKVBatch(iter_model, beta_max, **kw)
+        raise ValueError(f"unknown scheduler {name!r}; known: {sorted(LADDER) + ['netkv-batch']}")
+    return cls(iter_model, beta_max, **kw)

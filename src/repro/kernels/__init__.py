@@ -1,0 +1,13 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  flash_decode  GQA decode attention over long KV caches (online softmax)
+  kv_pack       paged-KV gather -> contiguous transfer buffer (FlowKV on TPU)
+  kv_unpack     decode-side scatter back into the page pool
+  netkv_score   Algorithm 1 scoring + masked argmin, fused
+  rwkv_scan     chunked WKV-6 recurrence with VMEM-resident state
+"""
+
+from . import ops, ref
+from .ops import flash_decode, kv_pack, kv_unpack, netkv_score, rwkv_scan
+
+__all__ = ["ops", "ref", "flash_decode", "kv_pack", "kv_unpack", "netkv_score", "rwkv_scan"]

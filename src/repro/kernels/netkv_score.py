@@ -1,0 +1,106 @@
+"""Pallas TPU netkv_score: Algorithm 1's scoring loop as one fused kernel.
+
+At 1000+ node scale the per-request scheduler scoring (lines 3-13 of
+Alg. 1) runs over thousands of candidates; this kernel fuses Eq. (2)-(7)
+elementwise math with the masked argmin reduction in a single VMEM pass.
+Tier lookups use a one-hot contraction over the 4 tiers (no gather).
+
+Candidates are padded to a multiple of 128 lanes; padding is masked
+infeasible.  Scalars (s_r, l_r, iter model, m_min, beta_max) ride SMEM
+scalar prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+BIG = 3.0e38
+
+
+def _score_kernel(scal_ref, free_ref, queued_ref, batch_ref, hit_ref, tier_ref,
+                  healthy_ref, scale_ref, bw_ref, lat_ref, cong_ref, infl_ref,
+                  cost_ref, best_ref, *, n_real: int):
+    s_r = scal_ref[0]
+    l_r = scal_ref[1]
+    iter_a = scal_ref[2]
+    iter_b = scal_ref[3]
+    m_min = scal_ref[4]
+    beta_max = scal_ref[5]
+
+    hit = jnp.minimum(hit_ref[...], l_r)
+    s_eff = s_r * (1.0 - hit / jnp.maximum(l_r, 1.0))                    # Eq. (2)
+
+    tier = tier_ref[...]
+    beff = jnp.zeros_like(s_eff)
+    lat = jnp.zeros_like(s_eff)
+    for t in range(4):
+        sel = (tier == t).astype(jnp.float32)
+        bt = bw_ref[0, t] * (1.0 - cong_ref[0, t]) / (1.0 + infl_ref[0, t])  # Eq. (4)
+        beff = beff + sel * bt
+        lat = lat + sel * lat_ref[0, t]
+    t_xfer = s_eff / jnp.maximum(beff, 1e-9) + lat                       # Eq. (3)
+
+    t_iter = (iter_a + iter_b * batch_ref[...]) * scale_ref[...]
+    blocked = jnp.maximum(0.0, queued_ref[...] - (beta_max - batch_ref[...]))
+    t_queue = blocked * t_iter                                           # Eq. (6)
+    t_dec = (iter_a + iter_b * (batch_ref[...] + 1.0)) * scale_ref[...]  # Eq. (7)
+
+    cost = t_xfer + t_queue + t_dec                                      # Eq. (5)
+    lane = jax.lax.broadcasted_iota(jnp.int32, cost.shape, 1)
+    feasible = (healthy_ref[...] > 0.5) & (free_ref[...] >= s_eff + m_min) & (lane < n_real)
+    cost = jnp.where(feasible, cost, BIG)
+    cost_ref[...] = cost
+    best_ref[0, 0] = jnp.argmin(cost[0]).astype(jnp.int32)
+
+
+def netkv_score(free_mem, queued, batch, hit_tokens, tier, healthy, iter_scale,
+                tier_bw, tier_lat, congestion, n_inflight,
+                *, s_r: float, input_len: float, iter_a: float, iter_b: float,
+                m_min: float, beta_max: int, interpret: bool = False):
+    """All candidate arrays are (D,).  Returns (costs (D,), best_idx ())."""
+    d = free_mem.shape[0]
+    dp = -(-d // LANES) * LANES
+    pad = dp - d
+
+    def prep(x, dtype=jnp.float32):
+        x = jnp.asarray(x, dtype)
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        return x.reshape(1, dp)
+
+    scal = jnp.asarray([s_r, input_len, iter_a, iter_b, m_min, float(beta_max)],
+                       jnp.float32)
+    kernel = functools.partial(_score_kernel, n_real=d)
+    costs, best = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((1, dp), lambda i, s: (0, 0))] * 7
+            + [pl.BlockSpec((1, 4), lambda i, s: (0, 0))] * 4,
+            out_specs=[
+                pl.BlockSpec((1, dp), lambda i, s: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i, s: (0, 0), memory_space=pltpu.SMEM),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        scal,
+        prep(free_mem), prep(queued), prep(batch), prep(hit_tokens),
+        prep(tier, jnp.int32), prep(healthy), prep(iter_scale),
+        jnp.asarray(tier_bw, jnp.float32).reshape(1, 4),
+        jnp.asarray(tier_lat, jnp.float32).reshape(1, 4),
+        jnp.asarray(congestion, jnp.float32).reshape(1, 4),
+        jnp.asarray(n_inflight, jnp.float32).reshape(1, 4),
+    )
+    return costs[0, :d], best[0, 0]

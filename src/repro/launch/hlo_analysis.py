@@ -1,0 +1,149 @@
+"""Loop-aware HLO accounting.
+
+XLA's ``cost_analysis``/HLO text count a while-loop body ONCE, but our step
+functions scan over layer periods, microbatches, attention chunks and MoE
+dispatch chunks — so raw counts undercount looped collectives by the trip
+product.  This parser segments the post-optimisation HLO into computations,
+extracts each while's trip count from the largest integer constant in its
+condition computation (the loop bound the induction variable is compared
+against), and propagates multipliers through the call graph (while bodies,
+fusions, calls).  Collective bytes are then summed with multipliers applied.
+
+Validated against hand-built scans in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+    r"\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def split_computations(hlo: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current: str | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                if stripped.startswith("ENTRY"):
+                    entry = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        comps[current].append(stripped)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Largest integer constant in the while condition = the loop bound."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            v = int(m.group(1))
+            if 1 < v <= 1_000_000:
+                best = max(best, v)
+    return best
+
+
+def computation_multipliers(hlo: str) -> dict[str, float]:
+    """Execution-count multiplier per computation, from ENTRY."""
+    comps, entry = split_computations(hlo)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0) -> None:
+        if name not in comps or depth > 50:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps[name]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(line)  # XLA-annotated exact trip count
+                trips = int(tm.group(1)) if tm else _trip_count(comps.get(cond, []))
+                visit(cond, m * (trips + 1), depth + 1)
+                visit(body, m * trips, depth + 1)
+                continue
+            for cm in _CALL_RE.finditer(line):
+                visit(cm.group(1), m, depth + 1)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def collective_bytes_loop_aware(hlo: str) -> dict[str, Any]:
+    """Per-kind collective operand bytes with loop-trip multipliers."""
+    comps, entry = split_computations(hlo)
+    mult = computation_multipliers(hlo)
+    per_kind = {k: 0.0 for k in COLLECTIVES}
+    raw_kind = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            om = re.search(r"=\s*\S+\s+([a-z\-]+?)(-start|-done)?\(", line)
+            if not om:
+                continue
+            base = om.group(1)
+            if base not in COLLECTIVES or om.group(2) == "-done":
+                continue
+            paren = line.index("(")
+            shapes = _SHAPE_RE.findall(line[paren:])
+            from_output = False
+            if not shapes:
+                # scheduled HLO omits operand types; fall back to the op's
+                # OUTPUT shape and normalise to operand bytes below.
+                shapes = _SHAPE_RE.findall(line[:paren])[:1]
+                from_output = True
+            if not shapes:
+                continue
+            total = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            if from_output:
+                gm = _GROUPS_RE.search(line)
+                gs = int(gm.group(2)) if gm else 1
+                if base == "all-gather" and gs > 0:
+                    total /= gs          # output = group_size x operand
+                elif base == "reduce-scatter":
+                    total *= gs          # operand = group_size x output
+            per_kind[base] += total * m
+            raw_kind[base] += total
+            counts[base] += 1
+    return {
+        "bytes_by_kind": {k: int(v) for k, v in per_kind.items()},
+        "raw_bytes_by_kind": {k: int(v) for k, v in raw_kind.items()},
+        "counts": counts,
+        "total_bytes": int(sum(per_kind.values())),
+        "raw_total_bytes": int(sum(raw_kind.values())),
+    }

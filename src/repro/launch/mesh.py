@@ -1,0 +1,51 @@
+"""Production mesh construction.
+
+Single pod:  (16, 16)      axes ("data", "model")          = 256 chips
+Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model")   = 512 chips
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under dryrun.py (it forces 512 host devices)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs)
+    data = n // model_axis
+    return jax.sharding.Mesh(
+        np.asarray(devs[: data * model_axis]).reshape(data, model_axis),
+        ("data", "model"),
+    )
+
+
+def batch_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def batch_shards(multi_pod: bool) -> int:
+    return 32 if multi_pod else 16

@@ -1,0 +1,73 @@
+"""Training launcher: real training on CPU (smoke/reduced configs) or dry-run
+lowering for the production mesh; checkpoint/restart built in.
+
+    python -m repro.launch.train --arch smollm-135m --steps 200 --smoke
+    python -m repro.launch.train --arch qwen3-14b --steps 100 --smoke --resume
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from repro.configs import get_spec
+from repro.models import init_params
+from repro.train import (
+    make_optimizer,
+    make_train_step,
+    restore_latest,
+    save_checkpoint,
+    synth_batch,
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=2)
+    args = ap.parse_args()
+
+    spec = get_spec(args.arch)
+    cfg = spec.smoke if args.smoke else spec.model
+    ckpt_dir = args.ckpt_dir or os.path.join("artifacts", "ckpt", args.arch)
+    opt = make_optimizer(spec.optimizer, lr=args.lr)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    state = opt.init(params)
+    start = 0
+    if args.resume:
+        restored = restore_latest(ckpt_dir, {"params": params, "opt": state})
+        if restored:
+            start, tree = restored
+            params, state = tree["params"], tree["opt"]
+            print(f"resumed from step {start}")
+    step_fn = jax.jit(make_train_step(cfg, opt, microbatches=args.microbatches,
+                                      batch_shards=1))
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = synth_batch(cfg, global_batch=args.batch, seq_len=args.seq,
+                            seed=args.seed, step=i)
+        params, state, metrics = step_fn(params, state, batch)
+        if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
+            save_checkpoint(ckpt_dir, i + 1, {"params": params, "opt": state})
+        if i % 10 == 0 or i + 1 == args.steps:
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/max(i-start+1,1):.2f}s/step)")
+    print(f"done: {args.steps} steps, checkpoints in {ckpt_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

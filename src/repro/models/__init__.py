@@ -1,0 +1,29 @@
+"""Model zoo: unified dense/MoE/hybrid/SSM/enc-dec LM in JAX."""
+
+from .model import (
+    ModelConfig,
+    abstract_params,
+    decode_step,
+    encode,
+    forward_logits,
+    forward_train,
+    init_params,
+    make_decode_cache,
+    param_specs,
+    prefill,
+    state_bytes,
+)
+from .moe import MoEConfig
+from .common import param_count
+from .sharding import (
+    axis_rules,
+    constrain,
+    param_partition_specs,
+    SERVE_RULES,
+    SERVE_RULES_MULTIPOD,
+    TRAIN_RULES,
+    TRAIN_RULES_MULTIPOD,
+    LONG_RULES,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,92 @@
+"""Shared model components: norms, RoPE, activations, init helpers.
+
+All forward math runs in ``compute_dtype`` (bf16 by default) with f32 norms
+and softmax accumulation, matching production LM frameworks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., S, H, d_head); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class InitSpec:
+    """Deferred parameter: shape + init scale; materialised by init_params or
+    turned into ShapeDtypeStruct by the dry-run (no allocation)."""
+
+    shape: tuple[int, ...]
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+    kind: str = "normal"  # "normal" | "zeros" | "ones"
+
+
+def materialise(tree, key: jax.Array, dtype=None):
+    """Turn a tree of InitSpec into concrete arrays (traceable)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, InitSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = dtype or spec.dtype
+        if spec.kind == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.kind == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        else:
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * spec.scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstractify(tree, dtype=None):
+    """Tree of InitSpec -> tree of ShapeDtypeStruct (for .lower() dry-runs)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, InitSpec),
+    )
+
+
+def param_count(tree) -> int:
+    import numpy as np
+
+    return int(
+        sum(
+            np.prod(l.shape)
+            for l in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, InitSpec))
+        )
+    )

@@ -1,0 +1,607 @@
+"""Unified LM model builder: dense / MoE / Mamba-hybrid / RWKV / enc-dec / VLM.
+
+A model is a stack of ``n_periods`` identical *periods*; a period is a short
+heterogeneous sequence of blocks (``block_pattern``) with per-position FFN
+choices (``ffn_pattern``).  Dense transformers use a period of length 1;
+Jamba uses the published 8-layer period (1 attention : 7 Mamba, MoE every
+second layer).  Layer parameters are stacked over the period axis and the
+forward pass is a single ``jax.lax.scan`` — compile time stays flat in depth.
+
+Entry points (all pure functions of (params, inputs)):
+  forward_train(cfg, params, batch)          -> scalar loss (+aux)
+  prefill(cfg, params, tokens, ...)          -> (logits_last, cache)
+  decode_step(cfg, params, token, cache)     -> (logits, cache)
+  encode(cfg, params, frames)                -> encoder memory  (enc-dec)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    chunked_causal_attention,
+    cross_attention,
+    decode_attention,
+    seq_sharded_decode_attention,
+)
+from .common import InitSpec, abstractify, materialise, rms_norm, apply_rope, swiglu
+from .moe import (
+    MoEConfig,
+    moe_ffn,
+    moe_param_specs,
+    moe_residual_param_specs,
+    moe_with_residual,
+)
+from .rwkv import (
+    HEAD_DIM as RWKV_HEAD_DIM,
+    rwkv_channel_mix,
+    rwkv_channel_mix_step,
+    rwkv_param_specs,
+    rwkv_time_mix,
+    rwkv_time_mix_step,
+)
+from .ssm import D_CONV, D_STATE, mamba_decode_step, mamba_forward, mamba_param_specs
+from .sharding import constrain, current_mesh, current_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: tuple[str, ...] = ("attn",)
+    ffn_pattern: tuple[str, ...] = ("dense",)
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    moe: Optional[MoEConfig] = None
+    n_enc_layers: int = 0                  # > 0 => encoder-decoder
+    frontend: Optional[str] = None         # None | "vision" | "audio"
+    n_prefix_embeds: int = 0               # VLM: stub patch embeddings per sample
+    norm_eps: float = 1e-6
+    attn_chunk: int = 1024
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = False          # checkpoint each period (training memory)
+
+    def __post_init__(self):
+        assert len(self.block_pattern) == len(self.ffn_pattern)
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: n_layers {self.n_layers} not divisible by period "
+            f"{len(self.block_pattern)}"
+        )
+
+    @property
+    def period_len(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period_len
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(b != "attn" for b in self.block_pattern)
+
+    @property
+    def n_attn_layers(self) -> int:
+        return self.n_periods * sum(1 for b in self.block_pattern if b == "attn")
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    specs = {
+        "ln": InitSpec((d,), kind="ones"),
+        "wq": InitSpec((d, h * dh)),
+        "wk": InitSpec((d, kv * dh)),
+        "wv": InitSpec((d, kv * dh)),
+        "wo": InitSpec((h * dh, d)),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = InitSpec((dh,), kind="ones")
+        specs["k_norm"] = InitSpec((dh,), kind="ones")
+    return specs
+
+
+def _ffn_specs(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "dense":
+        return {
+            "ln": InitSpec((d,), kind="ones"),
+            "gate": InitSpec((d, cfg.d_ff)),
+            "up": InitSpec((d, cfg.d_ff)),
+            "down": InitSpec((cfg.d_ff, d)),
+        }
+    if kind == "moe":
+        return {"ln": InitSpec((d,), kind="ones"), "moe": moe_param_specs(d, cfg.moe)}
+    if kind == "moe_res":
+        return {
+            "ln": InitSpec((d,), kind="ones"),
+            "moe": moe_residual_param_specs(d, cfg.d_ff, cfg.moe),
+        }
+    if kind == "none":
+        return {}
+    raise ValueError(kind)
+
+
+def _block_specs(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "attn":
+        return _attn_specs(cfg)
+    if kind == "mamba":
+        return {"ln": InitSpec((cfg.d_model,), kind="ones"), **mamba_param_specs(cfg.d_model)}
+    if kind == "rwkv":
+        return {
+            "ln1": InitSpec((cfg.d_model,), kind="ones"),
+            "ln2": InitSpec((cfg.d_model,), kind="ones"),
+            **rwkv_param_specs(cfg.d_model, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+def _stack(tree, n: int):
+    """Prefix every InitSpec shape with the period-stack dim."""
+    return jax.tree.map(
+        lambda s: InitSpec((n, *s.shape), s.scale, s.dtype, s.kind),
+        tree,
+        is_leaf=lambda x: isinstance(x, InitSpec),
+    )
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    period: dict[str, Any] = {}
+    for i, (blk, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        period[f"b{i}"] = _block_specs(cfg, blk)
+        if blk != "rwkv" and ffn != "none":
+            period[f"f{i}"] = _ffn_specs(cfg, ffn)
+    specs: dict[str, Any] = {
+        "embed": InitSpec((cfg.vocab_size, cfg.d_model), scale=0.01),
+        "out_norm": InitSpec((cfg.d_model,), kind="ones"),
+        "lm_head": InitSpec((cfg.d_model, cfg.vocab_size)),
+        "layers": _stack(period, cfg.n_periods),
+    }
+    if cfg.is_enc_dec:
+        enc_period = {"b0": _attn_specs(cfg), "f0": _ffn_specs(cfg, "dense")}
+        specs["enc_layers"] = _stack(enc_period, cfg.n_enc_layers)
+        specs["enc_norm"] = InitSpec((cfg.d_model,), kind="ones")
+        # decoder cross-attention per attention position
+        cross = {}
+        for i, blk in enumerate(cfg.block_pattern):
+            if blk == "attn":
+                cross[f"c{i}"] = _attn_specs(cfg)
+        specs["cross_layers"] = _stack(cross, cfg.n_periods)
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    return materialise(param_specs(cfg), key, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    return abstractify(param_specs(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (sequence mode: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_seq(cfg, p, x, positions, causal=True, return_kv=False):
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", xn, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", xn, p["wk"]).reshape(b, s, kv, dh)
+    v = jnp.einsum("bsd,de->bse", xn, p["wv"]).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    att = chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk, causal=causal)
+    out = jnp.einsum("bse,ed->bsd", att.reshape(b, s, h * dh), p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def _cross_seq(cfg, p, x, memory_kv):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", xn, p["wq"]).reshape(b, s, h, dh)
+    k_mem, v_mem = memory_kv
+    att = cross_attention(q, k_mem, v_mem)
+    return jnp.einsum("bse,ed->bsd", att.reshape(b, s, h * dh), p["wo"])
+
+
+def _ffn_apply(cfg, kind, p, x):
+    if kind == "dense":
+        xn = rms_norm(x, p["ln"], cfg.norm_eps)
+        return swiglu(xn, p["gate"], p["up"], p["down"]), 0.0
+    if kind == "moe":
+        xn = rms_norm(x, p["ln"], cfg.norm_eps)
+        out, aux = moe_ffn(xn, p["moe"], cfg.moe)
+        return out, aux
+    if kind == "moe_res":
+        xn = rms_norm(x, p["ln"], cfg.norm_eps)
+        out, aux = moe_with_residual(xn, p["moe"], cfg.moe)
+        return out, aux
+    raise ValueError(kind)
+
+
+def _period_seq(cfg: ModelConfig, period_params, x, positions, collect_cache: bool,
+                causal: bool = True, cross_params=None, memory_kv=None):
+    """Apply one period in sequence mode.  Returns (x, aux, cache_dict)."""
+    aux = 0.0
+    cache: dict[str, Any] = {}
+    for i, (blk, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        p = period_params[f"b{i}"]
+        if blk == "attn":
+            out, kvpair = _attn_seq(cfg, p, x, positions, causal=causal,
+                                    return_kv=collect_cache)
+            x = x + out
+            if collect_cache:
+                cache[f"k{i}"], cache[f"v{i}"] = kvpair
+            if cross_params is not None and f"c{i}" in cross_params:
+                x = x + _cross_seq(cfg, cross_params[f"c{i}"], x, memory_kv[f"c{i}"])
+        elif blk == "mamba":
+            xn = rms_norm(x, p["ln"], cfg.norm_eps)
+            out, state = mamba_forward(p, xn)
+            x = x + out
+            if collect_cache:
+                cache[f"ssm{i}"] = state["ssm"]
+                cache[f"conv{i}"] = state["conv"]
+        elif blk == "rwkv":
+            xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+            out, (wkv, last_x) = rwkv_time_mix(p, xn)
+            x = x + out
+            xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            out2, last_x2 = rwkv_channel_mix(p, xn2)
+            x = x + out2
+            if collect_cache:
+                cache[f"wkv{i}"] = wkv
+                cache[f"sa{i}"] = last_x
+                cache[f"sc{i}"] = last_x2
+        else:
+            raise ValueError(blk)
+        if blk != "rwkv" and ffn != "none":
+            out, a = _ffn_apply(cfg, ffn, period_params[f"f{i}"], x)
+            x = x + out
+            aux = aux + a
+        x = constrain(x, "batch", None, None)
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Top-level sequence forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, tokens, prefix_embeds):
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.compute_dtype), x], axis=1)
+    return constrain(x, "batch", None, None)
+
+
+def _backbone_seq(cfg, params, x, collect_cache=False, causal=True, memory=None):
+    """Scan the period stack over x.  Returns (x, aux, stacked_cache)."""
+    positions = jnp.arange(x.shape[1])[None, :]
+    layers = jax.tree.map(lambda a: a.astype(cfg.compute_dtype)
+                          if a.dtype == jnp.float32 and a.ndim > 1 else a, params["layers"])
+    cross_stack = params.get("cross_layers")
+    memory_kv_stack = None
+    if memory is not None and cross_stack is not None:
+        # Precompute cross-attention KV from encoder memory once per period.
+        memory_kv_stack = {}
+        b, se, d = memory.shape
+        kvh, dh = cfg.n_kv_heads, cfg.d_head
+        for name in cross_stack:
+            k = jnp.einsum("bsd,pde->pbse", memory, cross_stack[name]["wk"].astype(cfg.compute_dtype))
+            v = jnp.einsum("bsd,pde->pbse", memory, cross_stack[name]["wv"].astype(cfg.compute_dtype))
+            memory_kv_stack[name] = (
+                k.reshape(cfg.n_periods, b, se, kvh, dh),
+                v.reshape(cfg.n_periods, b, se, kvh, dh),
+            )
+
+    def body(carry, xs):
+        h, aux = carry
+        if memory_kv_stack is not None:
+            period_params, cross_p, mem_kv = xs
+            mem_kv = {k: v for k, v in mem_kv.items()}
+        else:
+            period_params = xs
+            cross_p, mem_kv = None, None
+        h, a, cache = _period_seq(cfg, period_params, h, positions, collect_cache,
+                                  causal=causal, cross_params=cross_p, memory_kv=mem_kv)
+        return (h, aux + a), cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if memory_kv_stack is not None:
+        cross_cd = jax.tree.map(lambda a: a.astype(cfg.compute_dtype)
+                                if a.dtype == jnp.float32 and a.ndim > 1 else a, cross_stack)
+        mem_by_name = {name: {"k": kv[0], "v": kv[1]} for name, kv in memory_kv_stack.items()}
+        xs = (layers, cross_cd, {n: (d["k"], d["v"]) for n, d in mem_by_name.items()})
+        (x, aux), caches = jax.lax.scan(body, (x, 0.0), xs)
+    else:
+        (x, aux), caches = jax.lax.scan(body, (x, 0.0), layers)
+    return x, aux, caches
+
+
+def forward_logits(cfg: ModelConfig, params, tokens, prefix_embeds=None,
+                   memory=None, causal=True):
+    """Full-sequence logits (train).  tokens: (B, S)."""
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    x, aux, _ = _backbone_seq(cfg, params, x, collect_cache=False, causal=causal,
+                              memory=memory)
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cfg.compute_dtype))
+    return constrain(logits, "batch", None, "vocab"), aux
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Encoder stack over stub frame/patch embeddings (B, T, d)."""
+    x = constrain(frames.astype(cfg.compute_dtype), "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+    enc = jax.tree.map(lambda a: a.astype(cfg.compute_dtype)
+                       if a.dtype == jnp.float32 and a.ndim > 1 else a, params["enc_layers"])
+
+    def body(h, period_params):
+        out, _ = _attn_seq(cfg, period_params["b0"], h, positions, causal=False)
+        h = h + out
+        o, _ = _ffn_apply(cfg, "dense", period_params["f0"], h)
+        return h + o, None
+
+    x, _ = jax.lax.scan(body, x, enc)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_train(cfg: ModelConfig, params, batch, aux_weight: float = 0.01):
+    """Causal-LM (or seq2seq) loss.  batch: {"tokens", "labels", [frames|embeds]}."""
+    memory = None
+    if cfg.is_enc_dec:
+        memory = encode(cfg, params, batch["frames"])
+    prefix = batch.get("embeds") if cfg.frontend == "vision" else None
+    logits, aux = forward_logits(cfg, params, batch["tokens"], prefix_embeds=prefix,
+                                 memory=memory)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, prefix_embeds=None, memory=None,
+            cache_len: int | None = None):
+    """Run the prompt; return (last-token logits, decode cache).
+
+    The attention KV cache is padded to ``cache_len`` (>= prompt length) so
+    decode can append tokens in place.
+    """
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    s_total = x.shape[1]
+    cache_len = cache_len or s_total
+    x, aux, caches = _backbone_seq(cfg, params, x, collect_cache=True, memory=memory)
+    # Pad K/V leaves from prompt length to cache_len.
+    pad = cache_len - s_total
+
+    def pad_kv(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name.startswith(("k", "v")) and leaf.ndim == 5:  # (P,B,S,KV,dh)
+            if pad > 0:
+                leaf = jnp.pad(leaf, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            return constrain(leaf, None, "batch", "kv_seq", None, None)
+        return leaf
+
+    caches = jax.tree_util.tree_map_with_path(pad_kv, caches)
+    if cfg.is_enc_dec and memory is not None:
+        # Cache the cross-attention KV (computed once from encoder memory).
+        cross_stack = jax.tree.map(
+            lambda a: a.astype(cfg.compute_dtype) if a.dtype == jnp.float32 and a.ndim > 1 else a,
+            params["cross_layers"])
+        b, se, _ = memory.shape
+        kvh, dh = cfg.n_kv_heads, cfg.d_head
+        for name in cross_stack:
+            i = name[1:]  # "c3" -> "3"
+            k = jnp.einsum("bsd,pde->pbse", memory.astype(cfg.compute_dtype),
+                           cross_stack[name]["wk"]).reshape(cfg.n_periods, b, se, kvh, dh)
+            v = jnp.einsum("bsd,pde->pbse", memory.astype(cfg.compute_dtype),
+                           cross_stack[name]["wv"]).reshape(cfg.n_periods, b, se, kvh, dh)
+            caches[f"ck{i}"], caches[f"cv{i}"] = k, v
+        caches["cross_memory"] = memory
+    caches["pos"] = jnp.int32(s_total)
+    x = rms_norm(x[:, -1:], params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cfg.compute_dtype))
+    return logits, caches
+
+
+def _period_decode(cfg, period_params, x, cache, pos, cross_params=None, memory=None,
+                   update_cache=True):
+    """One-token period application.
+
+    ``pos`` is scalar (uniform batch — the dry-run/benchmark case) or (B,)
+    per-slot positions (the continuous-batching serving engine).
+
+    ``update_cache=False`` treats the KV cache as read-only (paged-decode
+    semantics): the current token's KV is merged into the softmax and
+    returned as a fragment for the engine to land asynchronously — no
+    dynamic-update-slice on the (sharded) cache.
+    """
+    new_cache = {}
+    per_slot = getattr(pos, "ndim", 0) == 1
+    for i, (blk, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        p = period_params[f"b{i}"]
+        if blk == "attn":
+            b = x.shape[0]
+            h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            xn = rms_norm(x, p["ln"], cfg.norm_eps)
+            q = jnp.einsum("bsd,de->bse", xn, p["wq"]).reshape(b, 1, h, dh)
+            k = jnp.einsum("bsd,de->bse", xn, p["wk"]).reshape(b, 1, kvh, dh)
+            v = jnp.einsum("bsd,de->bse", xn, p["wv"]).reshape(b, 1, kvh, dh)
+            if cfg.qk_norm:
+                q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+            posv = (pos[:, None] if per_slot else jnp.full((1, 1), pos))
+            q = apply_rope(q, posv, cfg.rope_theta)
+            k = apply_rope(k, posv, cfg.rope_theta)
+            if not update_cache:
+                rules = current_rules() or {}
+                mesh = current_mesh()
+                seq_axes = tuple(rules.get("kv_seq", ()))
+                if mesh is not None and seq_axes and h % kvh == 0:
+                    # seq-sharded cache: explicit partial-softmax shard_map
+                    batch_axes = tuple(rules.get("batch", ()))
+                    att = seq_sharded_decode_attention(
+                        q, cache[f"k{i}"], cache[f"v{i}"], pos, k, v,
+                        mesh=mesh, batch_axes=batch_axes, seq_axes=seq_axes)
+                else:
+                    att = decode_attention(q, cache[f"k{i}"], cache[f"v{i}"], pos,
+                                           k_new=k, v_new=v)
+                new_cache[f"kf{i}"], new_cache[f"vf{i}"] = k, v
+            elif per_slot:
+                upd = jax.vmap(
+                    lambda c, kv, pp: jax.lax.dynamic_update_slice(c, kv, (pp, 0, 0))
+                )
+                k_cache = upd(cache[f"k{i}"], k.astype(cache[f"k{i}"].dtype), pos)
+                v_cache = upd(cache[f"v{i}"], v.astype(cache[f"v{i}"].dtype), pos)
+                valid_len = (pos + 1)[:, None, None, None]
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache[f"k{i}"], k.astype(cache[f"k{i}"].dtype), (0, pos, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache[f"v{i}"], v.astype(cache[f"v{i}"].dtype), (0, pos, 0, 0))
+                valid_len = pos + 1
+            if update_cache:
+                att = decode_attention(q, k_cache, v_cache, valid_len)
+                new_cache[f"k{i}"], new_cache[f"v{i}"] = k_cache, v_cache
+            x = x + jnp.einsum("bse,ed->bsd", att.reshape(b, 1, h * dh), p["wo"])
+            if cross_params is not None and f"c{i}" in cross_params:
+                cp = cross_params[f"c{i}"]
+                xn2 = rms_norm(x, cp["ln"], cfg.norm_eps)
+                qc = jnp.einsum("bsd,de->bse", xn2, cp["wq"]).reshape(b, 1, h, dh)
+                att2 = cross_attention(qc, cache[f"ck{i}"], cache[f"cv{i}"])
+                x = x + jnp.einsum("bse,ed->bsd", att2.reshape(b, 1, h * dh), cp["wo"])
+                new_cache[f"ck{i}"], new_cache[f"cv{i}"] = cache[f"ck{i}"], cache[f"cv{i}"]
+        elif blk == "mamba":
+            xn = rms_norm(x, p["ln"], cfg.norm_eps)
+            out, st = mamba_decode_step(p, xn, {"ssm": cache[f"ssm{i}"], "conv": cache[f"conv{i}"]})
+            x = x + out
+            new_cache[f"ssm{i}"], new_cache[f"conv{i}"] = st["ssm"], st["conv"]
+        elif blk == "rwkv":
+            xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+            out, wkv, last = rwkv_time_mix_step(p, xn, cache[f"wkv{i}"], cache[f"sa{i}"])
+            x = x + out
+            xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            out2, last2 = rwkv_channel_mix_step(p, xn2, cache[f"sc{i}"])
+            x = x + out2
+            new_cache[f"wkv{i}"], new_cache[f"sa{i}"], new_cache[f"sc{i}"] = wkv, last, last2
+        if blk != "rwkv" and ffn != "none":
+            out, _ = _ffn_apply(cfg, ffn, period_params[f"f{i}"], x)
+            x = x + out
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, *, update_cache=True):
+    """token: (B, 1) int32 -> (logits (B,1,V), updated cache).
+
+    ``cache["pos"]`` may be scalar (uniform) or (B,) per-slot positions.
+    ``update_cache=False``: read-only cache; new-KV fragments (kf/vf leaves)
+    are returned instead of updated k/v (paged-decode, see _period_decode)."""
+    pos = cache["pos"]
+    x = params["embed"][token].astype(cfg.compute_dtype)
+    x = constrain(x, "batch", None, None)
+    layers = jax.tree.map(lambda a: a.astype(cfg.compute_dtype)
+                          if a.dtype == jnp.float32 and a.ndim > 1 else a, params["layers"])
+    layer_cache = {k: v for k, v in cache.items() if k not in ("pos", "cross_memory")}
+    cross_stack = params.get("cross_layers")
+    if cross_stack is not None:
+        cross_stack = jax.tree.map(lambda a: a.astype(cfg.compute_dtype)
+                                   if a.dtype == jnp.float32 and a.ndim > 1 else a, cross_stack)
+
+    def body(h, xs):
+        if cross_stack is not None:
+            period_params, cross_p, cache_slice = xs
+        else:
+            period_params, cache_slice = xs
+            cross_p = None
+        h, new_cache = _period_decode(cfg, period_params, h, cache_slice, pos,
+                                      cross_params=cross_p,
+                                      update_cache=update_cache)
+        return h, new_cache
+
+    xs = (layers, cross_stack, layer_cache) if cross_stack is not None else (layers, layer_cache)
+    x, new_layer_cache = jax.lax.scan(body, x, xs)
+    out = dict(new_layer_cache)
+    out["pos"] = pos + 1
+    if "cross_memory" in cache:
+        out["cross_memory"] = cache["cross_memory"]
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cfg.compute_dtype))
+    return constrain(logits, "batch", None, "vocab"), out
+
+
+def make_decode_cache(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 0):
+    """Abstract cache shapes for the dry-run decode path (ShapeDtypeStruct)."""
+    caches: dict[str, Any] = {}
+    per = {}
+    kvh, dh = cfg.n_kv_heads, cfg.d_head
+    p = cfg.n_periods
+    cd = cfg.compute_dtype
+    for i, blk in enumerate(cfg.block_pattern):
+        if blk == "attn":
+            per[f"k{i}"] = jax.ShapeDtypeStruct((p, batch, cache_len, kvh, dh), cd)
+            per[f"v{i}"] = jax.ShapeDtypeStruct((p, batch, cache_len, kvh, dh), cd)
+            if cfg.is_enc_dec:
+                per[f"ck{i}"] = jax.ShapeDtypeStruct((p, batch, enc_len, kvh, dh), cd)
+                per[f"cv{i}"] = jax.ShapeDtypeStruct((p, batch, enc_len, kvh, dh), cd)
+        elif blk == "mamba":
+            d_inner = 2 * cfg.d_model
+            per[f"ssm{i}"] = jax.ShapeDtypeStruct((p, batch, d_inner, D_STATE), jnp.float32)
+            per[f"conv{i}"] = jax.ShapeDtypeStruct((p, batch, D_CONV - 1, d_inner), cd)
+        elif blk == "rwkv":
+            h = cfg.d_model // RWKV_HEAD_DIM
+            per[f"wkv{i}"] = jax.ShapeDtypeStruct((p, batch, h, RWKV_HEAD_DIM, RWKV_HEAD_DIM), jnp.float32)
+            per[f"sa{i}"] = jax.ShapeDtypeStruct((p, batch, cfg.d_model), cd)
+            per[f"sc{i}"] = jax.ShapeDtypeStruct((p, batch, cfg.d_model), cd)
+    caches.update(per)
+    caches["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches
+
+
+def state_bytes(cfg: ModelConfig, seq_len: int) -> int:
+    """Transferred decode-state bytes for one request (Eq. 1 generalised)."""
+    total = 0
+    p = cfg.n_periods
+    for i, blk in enumerate(cfg.block_pattern):
+        if blk == "attn":
+            total += 2 * p * seq_len * cfg.n_kv_heads * cfg.d_head * 2
+        elif blk == "mamba":
+            total += p * (2 * cfg.d_model * D_STATE * 4 + (D_CONV - 1) * 2 * cfg.d_model * 2)
+        elif blk == "rwkv":
+            h = cfg.d_model // RWKV_HEAD_DIM
+            total += p * (h * RWKV_HEAD_DIM * RWKV_HEAD_DIM * 4 + 2 * cfg.d_model * 2)
+    return total

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+Top-k routing with a per-expert token capacity C = ceil(T * k / E * cf);
+overflow tokens are dropped (their combine weight is zero), the standard
+TPU-friendly dispatch that keeps every tensor statically shaped.  Dispatch
+and combine are scatter/gather ops so that, with experts sharded over the
+model axis, GSPMD lowers them to all-to-alls (expert parallelism).
+
+Variants:
+  * plain top-k (granite: 32e top-8, jamba: 16e top-2)
+  * MoE + parallel dense residual branch (arctic: 128e top-2 + dense FFN)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import InitSpec, swiglu
+from .sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int            # expert hidden size
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic-style parallel dense FFN
+    dispatch_chunks: int = 1      # token-chunked dispatch (memory vs launch)
+
+
+def moe_param_specs(d_model: int, cfg: MoEConfig) -> dict:
+    e, f = cfg.n_experts, cfg.d_expert
+    return {
+        "router": InitSpec((d_model, e)),
+        "w_gate": InitSpec((e, d_model, f)),
+        "w_up": InitSpec((e, d_model, f)),
+        "w_down": InitSpec((e, f, d_model)),
+    }
+
+
+def moe_ffn(x: jax.Array, params: dict, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    aux_loss is the standard load-balancing loss (mean_e f_e * p_e * E).
+
+    With ``dispatch_chunks > 1`` the token stream is processed in chunks via
+    a checkpointed scan: the scatter/gather dispatch buffers (which GSPMD
+    cannot partition along the indexed expert dim) shrink by the chunk
+    count — the fix that brought arctic-480b prefill_32k from 157 GB/device
+    to budget (EXPERIMENTS.md §Perf iteration 1).
+    """
+    b, s, d = x.shape
+    nc = cfg.dispatch_chunks
+    if nc > 1 and s % nc == 0:
+        xc = x.reshape(b, nc, s // nc, d).transpose(1, 0, 2, 3)
+
+        def chunk_fn(carry, xi):
+            out, aux = _moe_ffn_once(xi, params, cfg)
+            return carry, (out, aux)
+
+        _, (outs, auxs) = jax.lax.scan(
+            jax.checkpoint(chunk_fn,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            None, xc)
+        out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        return out, jnp.mean(auxs)
+    return _moe_ffn_once(x, params, cfg)
+
+
+def _moe_ffn_once(x: jax.Array, params: dict, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(t * k / e * cfg.capacity_factor), 1)
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss.
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)    # (T, k, E)
+    frac_tokens = onehot.sum(axis=(0, 1)) / (t * k)
+    frac_probs = probs.mean(axis=0)
+    aux = jnp.sum(frac_tokens * frac_probs) * e
+
+    # Position of each (token, k) slot within its expert's capacity buffer.
+    flat_e = expert_idx.reshape(-1)                              # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    onehot_flat = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot_flat, axis=0) - onehot_flat     # (T*k, E)
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    gate_kept = jnp.where(keep, flat_gate, 0.0)
+    slot = jnp.where(keep, pos, cap)                              # overflow -> spill row
+
+    # Scatter tokens into (E, cap+1, d); the +1 row absorbs overflow.
+    # The expert-dim sharding constraints below pin the expert einsums to
+    # expert-local compute (EP): without them GSPMD all-gathers the FULL
+    # expert weight stacks in f32 inside every scan iteration (1.9 TB x512
+    # on jamba train_4k — EXPERIMENTS.md §Perf MoE iteration).
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].add(xf[token_idx])   # raw tokens; gates at combine
+    buf = constrain(buf[:, :cap], "experts", None, None)          # (E, cap, d)
+
+    # Expert computation (einsum over stacked expert weights), expert-local.
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, params["w_up"]
+    )
+    h = constrain(h, "experts", None, "ff")
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])           # (E, cap, d)
+    y = constrain(y, "experts", None, None)
+
+    # Gather back and combine with gate weights.
+    y = jnp.concatenate([y, jnp.zeros((e, 1, d), y.dtype)], axis=1)  # spill row = 0
+    picked = y[flat_e, slot]                                      # (T*k, d)
+    combined = jnp.zeros((t, d), x.dtype).at[token_idx].add(
+        picked * gate_kept[:, None].astype(x.dtype)
+    )
+    combined = constrain(combined, "batch", None)
+    return combined.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+def moe_with_residual(x, params, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """Arctic: dense FFN residual branch in parallel with the MoE."""
+    moe_out, aux = moe_ffn(x, params, cfg)
+    dense = swiglu(x, params["res_gate"], params["res_up"], params["res_down"])
+    return moe_out + dense, aux
+
+
+def moe_residual_param_specs(d_model: int, d_ff: int, cfg: MoEConfig) -> dict:
+    specs = moe_param_specs(d_model, cfg)
+    specs.update(
+        res_gate=InitSpec((d_model, d_ff)),
+        res_up=InitSpec((d_model, d_ff)),
+        res_down=InitSpec((d_ff, d_model)),
+    )
+    return specs

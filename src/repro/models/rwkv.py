@@ -1,0 +1,157 @@
+"""RWKV-6 (Finch) block: data-dependent decay linear attention.
+
+Time-mix with per-channel data-dependent decay  w_t = exp(-exp(w0 + lora(x)))
+and a rank-reduced ddlerp token shift; channel-mix FFN.  Attention-free: the
+decode state is (B, H, dh, dh) WKV state + two (B, d) shift states per layer,
+independent of sequence length — the arch-applicability case where NetKV's
+transfer term loses its context-length scaling (DESIGN §4).
+
+Prefill/train run a sequential ``lax.scan`` over time (the chunked-parallel
+Pallas kernel ``rwkv_scan`` accelerates this on TPU); decode is an O(1)
+state update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import InitSpec
+
+HEAD_DIM = 64
+LORA_R = 32
+
+
+def rwkv_param_specs(d_model: int, d_ff: int) -> dict:
+    h = d_model // HEAD_DIM
+    return {
+        # time-mix
+        "mu_base": InitSpec((5, d_model)),            # r,k,v,w,g static lerp
+        "mu_lora_a": InitSpec((d_model, LORA_R)),
+        "mu_lora_b": InitSpec((LORA_R, 5 * d_model), scale=0.0, kind="zeros"),
+        "w_r": InitSpec((d_model, d_model)),
+        "w_k": InitSpec((d_model, d_model)),
+        "w_v": InitSpec((d_model, d_model)),
+        "w_g": InitSpec((d_model, d_model)),
+        "w_o": InitSpec((d_model, d_model)),
+        "decay_base": InitSpec((d_model,), kind="zeros"),
+        "decay_lora_a": InitSpec((d_model, LORA_R)),
+        "decay_lora_b": InitSpec((LORA_R, d_model), scale=0.0, kind="zeros"),
+        "bonus_u": InitSpec((h, HEAD_DIM)),
+        "ln_x": InitSpec((d_model,), kind="ones"),
+        # channel-mix
+        "cm_mu": InitSpec((2, d_model)),
+        "cm_k": InitSpec((d_model, d_ff)),
+        "cm_v": InitSpec((d_ff, d_model)),
+        "cm_r": InitSpec((d_model, d_model)),
+    }
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent token-shift: five mixed streams (r,k,v,w,g)."""
+    d = x.shape[-1]
+    delta = x_prev - x
+    lora = jnp.tanh(jnp.einsum("...d,dr->...r", delta, params["mu_lora_a"]))
+    dyn = jnp.einsum("...r,re->...e", lora, params["mu_lora_b"]).reshape(*x.shape[:-1], 5, d)
+    mix = params["mu_base"] + dyn                       # (...,5,d)
+    return x[..., None, :] + delta[..., None, :] * mix  # (...,5,d)
+
+
+def _decay(params, xw):
+    lora = jnp.tanh(jnp.einsum("...d,dr->...r", xw, params["decay_lora_a"]))
+    w = params["decay_base"] + jnp.einsum("...r,rd->...d", lora, params["decay_lora_b"])
+    return jnp.exp(-jnp.exp(w.astype(jnp.float32)))     # (..., d) in (0,1)
+
+
+def _group_norm(x, scale):
+    # per-head RMS-style norm on (..., H, dh) flattened back to (..., d)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).reshape(
+        *x.shape[:-2], -1
+    ) * scale
+
+
+def rwkv_time_mix(params: dict, x: jax.Array, wkv0: jax.Array | None = None,
+                  shift0: jax.Array | None = None):
+    """x: (B, S, d) -> (out, (wkv_state, last_x)) sequential over S."""
+    b, s, d = x.shape
+    h = d // HEAD_DIM
+    x_prev = jnp.concatenate(
+        [shift0[:, None, :] if shift0 is not None else jnp.zeros((b, 1, d), x.dtype),
+         x[:, :-1]], axis=1)
+    mixed = _ddlerp(params, x, x_prev)                   # (B,S,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xr, params["w_r"]).reshape(b, s, h, HEAD_DIM)
+    k = jnp.einsum("bsd,de->bse", xk, params["w_k"]).reshape(b, s, h, HEAD_DIM)
+    v = jnp.einsum("bsd,de->bse", xv, params["w_v"]).reshape(b, s, h, HEAD_DIM)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["w_g"]))
+    w = _decay(params, xw).reshape(b, s, h, HEAD_DIM)    # f32
+    u = params["bonus_u"].astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B,h,dh) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)      # (B,h,dh,dh) f32
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        state = state * w_t[..., None] + kv
+        return state, y
+
+    s0 = wkv0 if wkv0 is not None else jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32)
+    xs = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)                        # (B,S,h,dh) f32
+    y = _group_norm(y, params["ln_x"]).astype(x.dtype)  # (B,S,d)
+    out = jnp.einsum("bsd,de->bse", y * g, params["w_o"])
+    return out, (final, x[:, -1])
+
+
+def rwkv_time_mix_step(params: dict, x: jax.Array, wkv: jax.Array, x_prev: jax.Array):
+    """Single token: x (B,1,d); wkv (B,h,dh,dh) f32; x_prev (B,d)."""
+    b, _, d = x.shape
+    h = d // HEAD_DIM
+    mixed = _ddlerp(params, x[:, 0], x_prev)             # (B,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, i] for i in range(5)]
+    r = jnp.einsum("bd,de->be", xr, params["w_r"]).reshape(b, h, HEAD_DIM).astype(jnp.float32)
+    k = jnp.einsum("bd,de->be", xk, params["w_k"]).reshape(b, h, HEAD_DIM).astype(jnp.float32)
+    v = jnp.einsum("bd,de->be", xv, params["w_v"]).reshape(b, h, HEAD_DIM).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bd,de->be", xg, params["w_g"]))
+    w = _decay(params, xw).reshape(b, h, HEAD_DIM)
+    u = params["bonus_u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, wkv + u[None, :, :, None] * kv)
+    new_wkv = wkv * w[..., None] + kv
+    y = _group_norm(y, params["ln_x"]).astype(x.dtype)
+    out = jnp.einsum("bd,de->be", y * g, params["w_o"])[:, None, :]
+    return out, new_wkv, x[:, 0]
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array, shift0: jax.Array | None = None):
+    """Channel-mix FFN with token shift; returns (out, last_x)."""
+    b, s, d = x.shape
+    x_prev = jnp.concatenate(
+        [shift0[:, None, :] if shift0 is not None else jnp.zeros((b, 1, d), x.dtype),
+         x[:, :-1]], axis=1)
+    delta = x_prev - x
+    xk = x + delta * params["cm_mu"][0]
+    xr = x + delta * params["cm_mu"][1]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["cm_k"])))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["cm_r"])) * jnp.einsum(
+        "bsf,fd->bsd", kk, params["cm_v"]
+    )
+    return out, x[:, -1]
+
+
+def rwkv_channel_mix_step(params: dict, x: jax.Array, x_prev: jax.Array):
+    b, _, d = x.shape
+    delta = x_prev - x[:, 0]
+    xk = x[:, 0] + delta * params["cm_mu"][0]
+    xr = x[:, 0] + delta * params["cm_mu"][1]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk, params["cm_k"])))
+    out = jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, params["cm_r"])) * jnp.einsum(
+        "bf,fd->bd", kk, params["cm_v"]
+    )
+    return out[:, None, :], x[:, 0]

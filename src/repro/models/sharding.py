@@ -1,0 +1,215 @@
+"""Logical-axis sharding: rules resolved against the active mesh.
+
+Model code annotates activations with *logical* axes ("batch", "seq",
+"model_dim", "heads", "ff", "vocab", "experts"); the launcher installs a rule
+set mapping logical axes onto mesh axes.  Outside a rules context every
+constraint is a no-op, so smoke tests run unsharded on one CPU device.
+
+Parameter partition specs are derived from leaf paths:
+  train mode -> FSDP + TP (weights sharded over data AND model axes)
+  serve mode -> TP only (weights replicated over data, batch sharded)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar[Mapping[str, tuple[str, ...]] | None] = contextvars.ContextVar(
+    "logical_axis_rules", default=None
+)
+
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("axis_rules_mesh", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Mapping[str, tuple[str, ...] | str | None], mesh=None):
+    norm = {}
+    for k, v in rules.items():
+        if v is None:
+            norm[k] = ()
+        elif isinstance(v, str):
+            norm[k] = (v,)
+        else:
+            norm[k] = tuple(v)
+    token = _RULES.set(norm)
+    mtoken = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+        _MESH.reset(mtoken)
+
+
+def current_rules():
+    return _RULES.get()
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def logical_to_spec(axes: Sequence[str | None]) -> P | None:
+    rules = _RULES.get()
+    if rules is None:
+        return None
+    dims = []
+    for a in axes:
+        if a is None:
+            dims.append(None)
+        else:
+            mesh_axes = rules.get(a, ())
+            dims.append(mesh_axes if len(mesh_axes) > 1 else (mesh_axes[0] if mesh_axes else None))
+    return P(*dims)
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without rules."""
+    spec = logical_to_spec(axes)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs by leaf path.
+# Patterns map path-regex -> logical axes per dim (excluding the leading
+# period-stack dim, which is always unsharded).
+# ---------------------------------------------------------------------------
+_PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed$", ("vocab", "fsdp")),
+    (r"lm_head$", ("fsdp", "vocab")),
+    (r"pos_embed$", (None, "fsdp")),
+    # attention
+    (r"(wq|wk|wv)$", ("fsdp", "heads")),
+    (r"wo$", ("heads", "fsdp")),
+    # dense mlp
+    (r"(w_gate|w_up|gate|up)$", ("fsdp", "ff")),
+    (r"(w_down|down)$", ("ff", "fsdp")),
+    # moe (leading expert dim)
+    (r"router$", ("fsdp", None)),
+    (r"moe/(w_gate|w_up)$", ("experts", "fsdp_moe", "ff")),
+    (r"moe/w_down$", ("experts", "ff", "fsdp_moe")),
+    (r"res_(gate|up)$", ("fsdp", "ff")),
+    (r"res_down$", ("ff", "fsdp")),
+    # mamba
+    (r"in_proj$", ("fsdp", "ff")),
+    (r"out_proj$", ("ff", "fsdp")),
+    (r"x_proj$", ("ff", None)),
+    (r"dt_proj$", (None, "ff")),
+    (r"(a_log|d_skip|dt_bias)$", ("ff",)),
+    (r"conv_w$", (None, "ff")),
+    # rwkv
+    (r"(w_r|w_k|w_v|w_g)$", ("fsdp", "heads")),
+    (r"w_o$", ("heads", "fsdp")),
+    (r"cm_k$", ("fsdp", "ff")),
+    (r"cm_v$", ("ff", "fsdp")),
+    (r"cm_r$", ("fsdp", "heads")),
+    (r"(mu_lora_a|decay_lora_a)$", ("fsdp", None)),
+    (r"(mu_lora_b|decay_lora_b)$", (None, "fsdp")),
+]
+
+TRAIN_RULES = {
+    "batch": ("data",), "seq": (), "model_dim": (),
+    "heads": ("model",), "ff": ("model",), "vocab": ("model",),
+    "experts": ("data",), "fsdp": ("data",), "fsdp_moe": (),
+    "kv_seq": (),
+}
+TRAIN_RULES_MULTIPOD = {
+    # FSDP over BOTH pod and data axes: a 480B model's optimizer state only
+    # fits when sharded across all 512 chips (EXPERIMENTS.md §Perf arctic).
+    **TRAIN_RULES, "batch": ("pod", "data"), "fsdp": ("pod", "data"),
+    "experts": ("pod", "data"),
+}
+SERVE_RULES = {
+    "batch": ("data",), "seq": (), "model_dim": (),
+    "heads": ("model",), "ff": ("model",), "vocab": ("model",),
+    "experts": ("data",), "fsdp": (), "fsdp_moe": (),
+    "kv_seq": ("model",),   # prefill-produced KV caches shard S over model
+}
+SERVE_RULES_MULTIPOD = {**SERVE_RULES, "batch": ("pod", "data")}
+# Long-context (batch=1): shard the KV/sequence dim over data instead.
+LONG_RULES = {**SERVE_RULES, "batch": (), "kv_seq": ("data",), "seq": ()}
+LONG_RULES_MULTIPOD = {**LONG_RULES}
+
+
+def _spec_for_path(path: str, ndim: int, rules: Mapping[str, tuple[str, ...]],
+                   stacked: bool) -> P:
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            dims: list = []
+            if stacked:
+                dims.append(None)
+            for a in axes:
+                if a is None:
+                    dims.append(None)
+                else:
+                    ma = rules.get(a, ())
+                    dims.append(ma if len(ma) > 1 else (ma[0] if ma else None))
+            # pad/trim to ndim
+            while len(dims) < ndim:
+                dims.append(None)
+            return P(*dims[:ndim])
+    return P(*([None] * ndim))
+
+
+def sanitize_specs(abstract_tree, spec_tree, mesh_axis_sizes: Mapping[str, int]):
+    """Drop sharding on dims not divisible by their assigned mesh axes.
+
+    Explicit pjit in_shardings require exact divisibility (GSPMD pads only
+    internal constraints); non-divisible cases (kv=8 heads over a 16-way
+    model axis, vocab=49155, 40 RWKV heads) fall back to replication on that
+    dim — recorded per cell in the dry-run JSON via spec comparison.
+    """
+
+    def fix(leaf, spec):
+        if spec is None:
+            return spec
+        dims = list(tuple(spec))
+        while len(dims) < len(leaf.shape):
+            dims.append(None)
+        out = []
+        for size, d in zip(leaf.shape, dims):
+            if d is None:
+                out.append(None)
+                continue
+            axes = list(d) if isinstance(d, tuple) else [d]
+            # Fall back to suffixes of the axis tuple before replicating:
+            # e.g. 16 experts over ("pod","data")=32 -> ("data",)=16.
+            chosen = None
+            while axes:
+                total = 1
+                for a in axes:
+                    total *= mesh_axis_sizes[a]
+                if size % total == 0:
+                    chosen = tuple(axes) if len(axes) > 1 else axes[0]
+                    break
+                axes = axes[1:]
+            out.append(chosen)
+        return P(*out)
+
+    return jax.tree.map(fix, abstract_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_partition_specs(abstract_params, mode: str = "train", multi_pod: bool = False):
+    """PartitionSpec pytree for a params pytree of ShapeDtypeStructs."""
+    if mode == "train":
+        rules = TRAIN_RULES_MULTIPOD if multi_pod else TRAIN_RULES
+    else:
+        rules = SERVE_RULES_MULTIPOD if multi_pod else SERVE_RULES
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        stacked = pstr.startswith(("layers", "enc_layers", "cross_layers"))
+        specs.append(_spec_for_path(pstr, len(leaf.shape), rules, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,123 @@
+"""Mamba (S6) block for the Jamba hybrid architecture.
+
+Selective state-space layer: input-dependent (Delta, B, C) with a diagonal
+state transition; sequential ``lax.scan`` over time for prefill/train and an
+O(1) single-step update for decode.  The recurrent state (B, d_inner,
+d_state) plus the conv tail (B, d_conv-1, d_inner) is the *transferred*
+decode state for NetKV on hybrid models (DESIGN §4): unlike KV it does not
+grow with sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import InitSpec
+
+D_STATE = 16
+D_CONV = 4
+
+
+def mamba_param_specs(d_model: int) -> dict:
+    d_inner = 2 * d_model
+    dt_rank = max(d_model // 16, 1)
+    return {
+        "in_proj": InitSpec((d_model, 2 * d_inner)),
+        "conv_w": InitSpec((D_CONV, d_inner)),
+        "conv_b": InitSpec((d_inner,), kind="zeros"),
+        "x_proj": InitSpec((d_inner, dt_rank + 2 * D_STATE)),
+        "dt_proj": InitSpec((dt_rank, d_inner)),
+        "dt_bias": InitSpec((d_inner,), kind="zeros"),
+        "a_log": InitSpec((d_inner, D_STATE), kind="ones"),
+        "d_skip": InitSpec((d_inner,), kind="ones"),
+        "out_proj": InitSpec((d_inner, d_model)),
+    }
+
+
+def _ssm_coeffs(params, x_in):
+    """x_in: (..., d_inner) -> (dt, B, C) input-dependent coefficients."""
+    dt_rank = params["dt_proj"].shape[0]
+    proj = jnp.einsum("...i,ik->...k", x_in, params["x_proj"])
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + D_STATE], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("...r,ri->...i", dt, params["dt_proj"]) + params["dt_bias"])
+    return dt, bmat, cmat
+
+
+def mamba_forward(params: dict, x: jax.Array) -> tuple[jax.Array, dict]:
+    """x: (B, S, d_model) -> (out, final_state) via sequential scan."""
+    b, s, _ = x.shape
+    d_inner = params["conv_w"].shape[1]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # Depthwise causal conv along time.
+    pad = jnp.zeros((b, D_CONV - 1, d_inner), x_in.dtype)
+    xc = jnp.concatenate([pad, x_in], axis=1)
+    conv = sum(
+        xc[:, i : i + s, :] * params["conv_w"][i][None, None, :] for i in range(D_CONV)
+    ) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+
+    dt, bmat, cmat = _ssm_coeffs(params, conv)          # (B,S,di),(B,S,N),(B,S,N)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))   # (di, N)
+
+    def step(state, inputs):
+        conv_t, dt_t, b_t, c_t = inputs                  # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a)                # (B,di,N)
+        state = state * da + (dt_t * conv_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bin,bn->bi", state, c_t)
+        return state, y
+
+    s0 = jnp.zeros((b, d_inner, D_STATE), jnp.float32)
+    xs = (
+        conv.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        bmat.transpose(1, 0, 2).astype(jnp.float32),
+        cmat.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    # Two-level scan with a checkpointed inner chunk: a flat scan would save
+    # the (B, d_inner, N) state at every timestep for backward (40 GB/device
+    # on jamba train_4k); chunking keeps one state per TIME_CHUNK.
+    TIME_CHUNK = 256
+    if s % TIME_CHUNK == 0 and s > TIME_CHUNK:
+        n_out = s // TIME_CHUNK
+
+        def inner(state, xs_chunk):
+            return jax.lax.scan(step, state, xs_chunk)
+
+        def outer(state, xs_chunk):
+            state, ys = jax.checkpoint(
+                inner, policy=jax.checkpoint_policies.nothing_saveable
+            )(state, xs_chunk)
+            return state, ys
+
+        xs_chunked = jax.tree.map(
+            lambda a: a.reshape(n_out, TIME_CHUNK, *a.shape[1:]), xs)
+        final_state, ys = jax.lax.scan(outer, s0, xs_chunked)
+        ys = ys.reshape(s, *ys.shape[2:])
+    else:
+        final_state, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)            # (B,S,di)
+    y = y + conv * params["d_skip"]
+    out = jnp.einsum("bsi,id->bsd", y * jax.nn.silu(z), params["out_proj"])
+    state = {"ssm": final_state, "conv": xc[:, -(D_CONV - 1):, :]}
+    return out, state
+
+
+def mamba_decode_step(params: dict, x: jax.Array, state: dict) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d_model); state: {"ssm": (B,di,N) f32, "conv": (B,D_CONV-1,di)}."""
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                  # (B,1,di)
+    xc = jnp.concatenate([state["conv"], x_in], axis=1)  # (B,D_CONV,di)
+    conv = sum(xc[:, i, :] * params["conv_w"][i][None, :] for i in range(D_CONV))
+    conv = jax.nn.silu(conv + params["conv_b"])          # (B,di)
+    dt, bmat, cmat = _ssm_coeffs(params, conv)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+    new_ssm = state["ssm"] * da + (dt * conv).astype(jnp.float32)[..., None] * bmat.astype(
+        jnp.float32
+    )[:, None, :]
+    y = jnp.einsum("bin,bn->bi", new_ssm, cmat.astype(jnp.float32)).astype(x.dtype)
+    y = y + conv * params["d_skip"]
+    out = jnp.einsum("bi,id->bd", y * jax.nn.silu(z[:, 0]), params["out_proj"])[:, None, :]
+    return out, {"ssm": new_ssm, "conv": xc[:, 1:, :]}

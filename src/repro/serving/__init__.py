@@ -1,0 +1,9 @@
+"""Executable disaggregated serving: real engines + NetKV routing."""
+
+from .engine import DecodeEngine, PrefillEngine, PrefillResult
+from .cluster import DisaggregatedCluster, ServeRequest, ServeResult
+from .transfer import pack_transfer, unpack_transfer
+
+__all__ = ["DecodeEngine", "PrefillEngine", "PrefillResult",
+           "DisaggregatedCluster", "ServeRequest", "ServeResult",
+           "pack_transfer", "unpack_transfer"]

@@ -1,0 +1,79 @@
+"""KV transfer path: page the prefill cache, pack to a contiguous buffer.
+
+On TPU the pack runs the Pallas ``kv_pack`` kernel (single large DMA out);
+here it validates in interpret mode.  The byte count it returns is what the
+NetKV cost model prices (Eq. 1/2): callers skip packing the prefix-hit pages
+(Eq. 2's lambda term).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import B_TOK
+from repro.kernels import ops
+
+
+def paged_view(k_cache, page_tokens: int = B_TOK):
+    """(P, 1, S, KV, dh) per-request cache leaf -> (P*S/page, page, KV, dh)."""
+    p, b, s, kv, dh = k_cache.shape
+    assert b == 1
+    n_pages = s // page_tokens
+    return k_cache.reshape(p * n_pages, page_tokens, kv, dh)
+
+
+def pack_transfer(cache: dict, hit_pages: int, page_tokens: int = B_TOK):
+    """Pack every non-hit page of the attention KV leaves into one buffer.
+
+    Returns (buffers dict, total_bytes) — the effective transfer payload
+    s_eff of Eq. (2), materialised.
+    """
+    buffers = {}
+    total = 0
+    for name, leaf in cache.items():
+        if name == "pos" or not hasattr(leaf, "shape"):
+            continue
+        if name.startswith(("k", "v")) and leaf.ndim == 5:
+            pos = int(cache["pos"])
+            n_pages_valid = max((pos + page_tokens - 1) // page_tokens, 0)
+            pool = paged_view(leaf, page_tokens)
+            periods = leaf.shape[0]
+            pages_per_period = leaf.shape[2] // page_tokens
+            table = []
+            for per in range(periods):
+                for pg in range(hit_pages, n_pages_valid):
+                    table.append(per * pages_per_period + pg)
+            if not table:
+                continue
+            buf = ops.kv_pack(pool, jnp.asarray(table, jnp.int32))
+            buffers[name] = (buf, tuple(table))
+            total += buf.size * buf.dtype.itemsize
+        else:
+            # Fixed-size state (Mamba/RWKV/pos-independent): ships whole.
+            buffers[name] = (leaf, None)
+            total += leaf.size * leaf.dtype.itemsize
+    return buffers, total
+
+
+def unpack_transfer(buffers: dict, like_cache: dict, page_tokens: int = B_TOK):
+    """Reassemble a per-request cache dict from transfer buffers."""
+    out = {}
+    for name, leaf in like_cache.items():
+        if name == "pos" or not hasattr(leaf, "shape"):
+            continue
+        if name in buffers:
+            buf, table = buffers[name]
+            if table is None:
+                out[name] = buf
+            else:
+                pool = jnp.zeros(
+                    (int(np.prod((leaf.shape[0], leaf.shape[2] // page_tokens))),
+                     page_tokens, leaf.shape[3], leaf.shape[4]),
+                    leaf.dtype,
+                )
+                pool = ops.kv_unpack(pool, buf, jnp.asarray(table, jnp.int32))
+                out[name] = pool.reshape(leaf.shape)
+        else:
+            out[name] = jnp.zeros(leaf.shape, leaf.dtype)
+    return out

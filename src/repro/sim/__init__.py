@@ -1,0 +1,13 @@
+"""Discrete-event disaggregated-serving simulator."""
+
+from .engine import EventLoop
+from .kvcache import B_TOK, BlockCache, n_blocks
+from .instances import DecodeSim, PrefillSim, RequestState
+from .metrics import RunMetrics, aggregate_seeds, summarize
+from .simulator import FaultEvent, SimConfig, Simulation, run_sim
+
+__all__ = [
+    "EventLoop", "B_TOK", "BlockCache", "n_blocks", "DecodeSim", "PrefillSim",
+    "RequestState", "RunMetrics", "aggregate_seeds", "summarize",
+    "FaultEvent", "SimConfig", "Simulation", "run_sim",
+]

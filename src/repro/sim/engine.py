@@ -1,0 +1,59 @@
+"""Minimal deterministic discrete-event engine (heap-based)."""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable
+
+
+class Event:
+    __slots__ = ("time", "seq", "fn", "cancelled")
+
+    def __init__(self, time: float, seq: int, fn: Callable[[float], None]):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.cancelled = False
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class EventLoop:
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.processed = 0
+
+    def at(self, time: float, fn: Callable[[float], None]) -> Event:
+        if time < self.now - 1e-12:
+            time = self.now  # clamp: callbacks may round slightly backwards
+        ev = Event(max(time, self.now), next(self._seq), fn)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def after(self, delay: float, fn: Callable[[float], None]) -> Event:
+        return self.at(self.now + max(delay, 0.0), fn)
+
+    def cancel(self, ev: Event) -> None:
+        ev.cancelled = True
+
+    def run(self, until: float = float("inf"), max_events: int = 50_000_000) -> None:
+        while self._heap and self.processed < max_events:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            if ev.time > until:
+                heapq.heappush(self._heap, ev)  # put back for a later resume
+                self.now = until
+                return
+            self.now = ev.time
+            self.processed += 1
+            ev.fn(self.now)
+        if self._heap and self.processed >= max_events:
+            raise RuntimeError("event budget exhausted — runaway simulation?")
+
+    def empty(self) -> bool:
+        return not any(not e.cancelled for e in self._heap)

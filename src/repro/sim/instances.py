@@ -1,0 +1,224 @@
+"""Prefill / decode instance models with continuous batching (§III-C, §VI-B).
+
+PrefillSim: serial compute queue, T_prefill(l) = c*l + d.  The prefill-side
+KV buffer is held until the transfer-complete callback (vLLM KVConnector
+semantics), so a decode-instance failure during transfer can re-schedule
+without re-running prefill.
+
+DecodeSim: continuous batching at iteration boundaries (Orca-style): a
+request arriving mid-iteration waits for the current step to finish before
+joining the active batch; each iteration every active request emits one
+token.  Memory: aggregate KV budget; active (pinned) KV plus an LRU block
+cache of completed prefixes (evictable, so it counts as free to the
+scheduler, matching vLLM block-manager semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+from repro.core.cost import IterTimeModel, ModelKVSpec, PrefillTimeModel
+from repro.traces.mooncake import Request
+from .engine import EventLoop
+from .kvcache import B_TOK, BlockCache
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    kv_bytes: float
+    prefill_instance: int = -1
+    prefill_start: float = -1.0
+    prefill_end: float = -1.0
+    sched_time: float = -1.0
+    decode_instance: int = -1
+    tier: int = -1
+    s_eff: float = 0.0
+    hit_tokens: float = 0.0
+    transfer_end: float = -1.0
+    admit_time: float = -1.0
+    first_token: float = -1.0
+    finish: float = -1.0
+    tbt: float = -1.0
+    tokens_out: int = 0
+    rejected: bool = False
+    requeues: int = 0  # fault-tolerance: times re-scheduled after a failure
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.req.arrival if self.first_token >= 0 else float("inf")
+
+
+class PrefillSim:
+    def __init__(self, instance_id: int, server, prefill_model: PrefillTimeModel,
+                 loop: EventLoop):
+        self.instance_id = instance_id
+        self.server = server
+        self.model = prefill_model
+        self.loop = loop
+        self.busy_until = 0.0
+        self.queue: deque[RequestState] = deque()
+        self.running: Optional[RequestState] = None
+        self.on_done: Callable[[RequestState, float], None] | None = None
+        self.healthy = True
+
+    def submit(self, rs: RequestState, now: float) -> None:
+        rs.prefill_instance = self.instance_id
+        self.queue.append(rs)
+        self._maybe_start(now)
+
+    def eta(self, now: float) -> float:
+        """Earliest time a new request would *finish* prefill here."""
+        t = max(self.busy_until, now)
+        for rs in self.queue:
+            t += self.model(rs.req.input_len)
+        return t
+
+    def _maybe_start(self, now: float) -> None:
+        if self.running is not None or not self.queue or not self.healthy:
+            return
+        rs = self.queue.popleft()
+        self.running = rs
+        rs.prefill_start = max(now, self.busy_until)
+        dur = self.model(rs.req.input_len)
+        self.busy_until = rs.prefill_start + dur
+        self.loop.at(self.busy_until, self._finish)
+
+    def _finish(self, now: float) -> None:
+        rs = self.running
+        if rs is None:
+            return
+        rs.prefill_end = now
+        self.running = None
+        if self.on_done is not None:
+            self.on_done(rs, now)
+        self._maybe_start(now)
+
+
+class DecodeSim:
+    def __init__(
+        self,
+        instance_id: int,
+        server,
+        iter_model: IterTimeModel,
+        beta_max: int,
+        kv_budget: float,
+        kv_spec: ModelKVSpec,
+        loop: EventLoop,
+    ):
+        self.instance_id = instance_id
+        self.server = server
+        self.iter_model = iter_model
+        self.beta_max = beta_max
+        self.kv_budget = kv_budget
+        self.kv_spec = kv_spec
+        self.loop = loop
+        self.cache = BlockCache(kv_budget, bytes_per_block=kv_spec.kv_bytes_per_token * B_TOK)
+        self.active: dict[int, RequestState] = {}
+        self.queue: deque[RequestState] = deque()
+        self.pinned_bytes = 0.0
+        self.healthy = True
+        self.iter_scale = 1.0          # true slowdown factor (straggler)
+        self.iter_scale_est = 1.0      # scheduler-visible EWMA estimate
+        self._iterating = False
+        self._iter_event = None
+        self.iterations = 0
+        self.on_first_token: Callable[[RequestState, float], None] | None = None
+        self.on_finish: Callable[[RequestState, float], None] | None = None
+
+    # ---- scheduler-visible state (§III-C) --------------------------------
+    @property
+    def beta(self) -> int:
+        return len(self.active)
+
+    @property
+    def queued(self) -> int:
+        return len(self.queue)
+
+    @property
+    def free_memory(self) -> float:
+        # LRU cache is evictable => counts as free.
+        return self.kv_budget - self.pinned_bytes
+
+    def hit_tokens(self, req: Request) -> int:
+        return self.cache.hit_tokens(req.block_hashes, req.input_len)
+
+    # ---- lifecycle ---------------------------------------------------------
+    def reserve(self, rs: RequestState, now: float) -> None:
+        """Pin KV for an inbound transfer (memory committed at dispatch)."""
+        self.pinned_bytes += rs.kv_bytes
+        self.cache.evict_to(self.pinned_bytes)
+
+    def admit_after_transfer(self, rs: RequestState, now: float) -> None:
+        """Transfer landed: blocks now resident; join the batch queue."""
+        self.cache.insert(rs.req.block_hashes, protected=self.pinned_bytes)
+        self.queue.append(rs)
+        self._maybe_iterate(now)
+
+    def release(self, rs: RequestState) -> None:
+        self.pinned_bytes = max(0.0, self.pinned_bytes - rs.kv_bytes)
+
+    def fail(self, now: float) -> list[RequestState]:
+        """Hard failure: drop all state, return the victims for re-scheduling."""
+        self.healthy = False
+        victims = list(self.active.values()) + list(self.queue)
+        self.active.clear()
+        self.queue.clear()
+        self.pinned_bytes = 0.0
+        self.cache = BlockCache(self.kv_budget, self.cache.bytes_per_block)
+        if self._iter_event is not None:
+            self.loop.cancel(self._iter_event)
+            self._iter_event = None
+        self._iterating = False
+        return victims
+
+    # ---- continuous batching ------------------------------------------------
+    def _admit(self, now: float) -> None:
+        while self.queue and len(self.active) < self.beta_max:
+            rs = self.queue.popleft()
+            rs.admit_time = now
+            rs.tbt = self.iter_model(self.beta + 1) * self.iter_scale  # §VI-A: TBT at entry
+            self.active[rs.req.request_id] = rs
+
+    def _maybe_iterate(self, now: float) -> None:
+        if self._iterating or not self.healthy:
+            return
+        if not self.active and not self.queue:
+            return
+        self._admit(now)
+        if not self.active:
+            return
+        self._iterating = True
+        dur = self.iter_model(self.beta) * self.iter_scale
+        self._iter_event = self.loop.after(dur, self._iter_done)
+
+    def _iter_done(self, now: float) -> None:
+        self._iterating = False
+        self._iter_event = None
+        if not self.healthy:
+            return
+        self.iterations += 1
+        # EWMA straggler estimator the scheduler reads (beyond paper, §DESIGN 8).
+        self.iter_scale_est += 0.2 * (self.iter_scale - self.iter_scale_est)
+        finished: list[RequestState] = []
+        for rs in self.active.values():
+            rs.tokens_out += 1
+            if rs.tokens_out == 1:
+                rs.first_token = now
+                if self.on_first_token:
+                    self.on_first_token(rs, now)
+            # Decode-side KV growth: one token per iteration.
+            self.pinned_bytes += self.kv_spec.kv_bytes_per_token
+            if rs.tokens_out >= rs.req.output_len:
+                finished.append(rs)
+        for rs in finished:
+            del self.active[rs.req.request_id]
+            rs.finish = now
+            grown = rs.kv_bytes + rs.req.output_len * self.kv_spec.kv_bytes_per_token
+            self.pinned_bytes = max(0.0, self.pinned_bytes - grown)
+            if self.on_finish:
+                self.on_finish(rs, now)
+        self.cache.evict_to(self.pinned_bytes)
+        self._maybe_iterate(now)

@@ -1,0 +1,77 @@
+"""Block-level prefix KV cache with LRU eviction (§III-B).
+
+Block size B_tok = 16 tokens.  A request's content is a sequence of block
+hashes; the cache hit length lambda_r(d) is B_tok times the longest common
+*block-aligned prefix* between the request and the cache contents — a hit
+requires every earlier block to also be present (LCP semantics, not set
+membership).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Sequence
+
+from repro.core.cost import B_TOK, n_blocks
+
+
+class BlockCache:
+    """LRU over block hashes, budgeted in bytes."""
+
+    def __init__(self, budget_bytes: float, bytes_per_block: float):
+        self.budget = budget_bytes
+        self.bytes_per_block = bytes_per_block
+        self._lru: OrderedDict[Hashable, None] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @property
+    def bytes_used(self) -> float:
+        return len(self._lru) * self.bytes_per_block
+
+    def __contains__(self, h: Hashable) -> bool:
+        return h in self._lru
+
+    def lcp_blocks(self, hashes: Sequence[Hashable]) -> int:
+        """|LCP_block(h_r, K_d)|: leading blocks all present in the cache."""
+        n = 0
+        for h in hashes:
+            if h in self._lru:
+                n += 1
+            else:
+                break
+        return n
+
+    def hit_tokens(self, hashes: Sequence[Hashable], input_len: int) -> int:
+        """lambda_r(d) = B_tok * LCP, clamped to the true input length."""
+        return min(self.lcp_blocks(hashes) * B_TOK, input_len)
+
+    def touch(self, hashes: Sequence[Hashable]) -> None:
+        """Mark blocks as recently used (move to MRU end)."""
+        for h in hashes:
+            if h in self._lru:
+                self._lru.move_to_end(h)
+                self.hits += 1
+            else:
+                self.misses += 1
+
+    def insert(self, hashes: Sequence[Hashable], protected: float = 0.0) -> None:
+        """Insert blocks, evicting LRU entries beyond budget.
+
+        ``protected`` bytes are pinned elsewhere (active batches) and shrink
+        the evictable budget.
+        """
+        for h in hashes:
+            self._lru[h] = None
+            self._lru.move_to_end(h)
+        limit = max(self.budget - protected, 0.0)
+        while self.bytes_used > limit and self._lru:
+            self._lru.popitem(last=False)
+            self.evictions += 1
+
+    def evict_to(self, protected: float) -> None:
+        limit = max(self.budget - protected, 0.0)
+        while self.bytes_used > limit and self._lru:
+            self._lru.popitem(last=False)
+            self.evictions += 1

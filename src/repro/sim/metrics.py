@@ -1,0 +1,99 @@
+"""Metric collection: TTFT, TBT, SLO attainment, goodput, transfer stats."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    scheduler: str
+    n_measured: int
+    n_rejected: int
+    n_unfinished: int
+    ttft_mean: float
+    ttft_p50: float
+    ttft_p95: float
+    ttft_p99: float
+    tbt_mean: float
+    tbt_p95: float
+    slo_attainment: float
+    goodput_rps: float
+    xfer_mean: float
+    xfer_p95: float
+    tier_fraction: dict[int, float]
+    hit_frac_mean: float
+    decision_latency_mean: float
+    decision_latency_p99: float
+    requeues: int = 0
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("tier_fraction")
+        for t in range(4):
+            d[f"tier{t}"] = self.tier_fraction.get(t, 0.0)
+        return d
+
+
+def summarize(records, *, window: tuple[float, float], scheduler: str,
+              decision_latencies=(), rejected: int = 0) -> RunMetrics:
+    """Aggregate per-request records whose ARRIVAL falls in the window."""
+    lo, hi = window
+    meas = [r for r in records if lo <= r.req.arrival < hi and not r.rejected]
+    done = [r for r in meas if r.first_token >= 0]
+    unfinished = len(meas) - len(done)
+    ttfts = np.array([r.ttft for r in done]) if done else np.array([np.inf])
+    tbts = np.array([r.tbt for r in done if r.tbt >= 0]) if done else np.array([0.0])
+    # Transfer time: from prefill end (scheduling) to transfer landed.
+    xfers = np.array([r.transfer_end - r.prefill_end for r in done if r.transfer_end >= 0])
+    if xfers.size == 0:
+        xfers = np.array([0.0])
+    slo_ok = sum(1 for r in done if r.ttft <= r.req.slo)
+    denom = max(len(meas), 1)
+    span = max(hi - lo, 1e-9)
+    tiers = [r.tier for r in done if r.tier >= 0]
+    tier_frac = {
+        t: (sum(1 for x in tiers if x == t) / max(len(tiers), 1)) for t in range(4)
+    }
+    hits = np.array(
+        [min(r.hit_tokens, r.req.input_len) / max(r.req.input_len, 1) for r in done]
+    ) if done else np.array([0.0])
+    dl = np.array(decision_latencies) if len(decision_latencies) else np.array([0.0])
+    return RunMetrics(
+        scheduler=scheduler,
+        n_measured=len(meas),
+        n_rejected=rejected,
+        n_unfinished=unfinished,
+        ttft_mean=float(np.mean(ttfts[np.isfinite(ttfts)])) if np.isfinite(ttfts).any() else float("inf"),
+        ttft_p50=float(np.percentile(ttfts, 50)),
+        ttft_p95=float(np.percentile(ttfts, 95)),
+        ttft_p99=float(np.percentile(ttfts, 99)),
+        tbt_mean=float(np.mean(tbts)),
+        tbt_p95=float(np.percentile(tbts, 95)),
+        slo_attainment=slo_ok / denom,
+        goodput_rps=slo_ok / span,
+        xfer_mean=float(np.mean(xfers)),
+        xfer_p95=float(np.percentile(xfers, 95)),
+        tier_fraction=tier_frac,
+        hit_frac_mean=float(np.mean(hits)),
+        decision_latency_mean=float(np.mean(dl)),
+        decision_latency_p99=float(np.percentile(dl, 99)),
+        requeues=sum(r.requeues for r in meas),
+    )
+
+
+def aggregate_seeds(runs: list[RunMetrics]) -> dict:
+    """mean ± std across seeds for the headline metrics."""
+    keys = ["ttft_mean", "ttft_p99", "tbt_mean", "slo_attainment", "xfer_mean",
+            "goodput_rps"]
+    out = {"scheduler": runs[0].scheduler, "n_seeds": len(runs)}
+    for k in keys:
+        vals = np.array([getattr(r, k) for r in runs], dtype=np.float64)
+        vals = vals[np.isfinite(vals)]
+        out[k] = float(vals.mean()) if vals.size else float("nan")
+        out[k + "_std"] = float(vals.std()) if vals.size else float("nan")
+    for t in range(4):
+        out[f"tier{t}"] = float(np.mean([r.tier_fraction.get(t, 0.0) for r in runs]))
+    return out

@@ -1,0 +1,399 @@
+"""End-to-end disaggregated-serving simulation (§VI-A/B).
+
+Wires trace -> prefill pool -> scheduler (decode-instance selection) ->
+flow-level network transfer -> continuous-batching decode -> metrics.
+
+Scheduler decisions use only scheduler-visible state: per-instance compute
+metrics refreshed at each scheduling event and oracle-provided network
+metrics refreshed every Delta_oracle seconds; the scheduler cannot observe
+per-flow network state or future arrivals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.cost import (
+    H100_TP4_ITER,
+    H100_TP4_PREFILL,
+    IterTimeModel,
+    LLAMA3_70B_KV,
+    ModelKVSpec,
+    PrefillTimeModel,
+)
+from repro.core.oracle import NetworkCostOracle, SelfContentionTracker
+from repro.core.schedulers import CandidateState, RequestInfo, make_scheduler
+from repro.core.batch_assign import NetKVBatch
+from repro.core.multihop import NetKVMultiHop, StagingStore
+from repro.cluster.network import BackgroundTraffic, FlowNetwork, Transfer
+from repro.cluster.topology import FatTree, make_instances
+from repro.traces.mooncake import Request
+from .engine import EventLoop
+from .instances import DecodeSim, PrefillSim, RequestState
+from .metrics import RunMetrics, summarize
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    time: float
+    kind: str            # "kill_decode" | "add_decode" | "slowdown"
+    instance_id: int = -1
+    factor: float = 2.0  # slowdown factor
+    detection_delay: float = 0.25
+
+
+@dataclasses.dataclass
+class SimConfig:
+    scheduler: str = "netkv-full"
+    scheduler_kwargs: dict = dataclasses.field(default_factory=dict)
+    # topology
+    n_pods: int = 2
+    racks_per_pod: int = 2
+    servers_per_rack: int = 2
+    gpus_per_server: int = 8
+    tier_bandwidth: dict | None = None
+    tier_latency: dict | None = None
+    n_tor_uplinks: int = 8
+    n_agg_uplinks: int = 8
+    # instances
+    tp: int = 4
+    n_prefill: int = 4
+    beta_max: int = 64
+    hbm_free_per_gpu: float = 45e9          # §VI-A: 45 GB free HBM per GPU
+    kv_spec: ModelKVSpec = LLAMA3_70B_KV
+    iter_model: IterTimeModel = H100_TP4_ITER
+    prefill_model: PrefillTimeModel = H100_TP4_PREFILL
+    m_min: float = 2e9
+    # oracle / network
+    oracle_refresh: float = 1.0
+    background: float | dict = 0.0
+    bg_wander: float = 0.25
+    inflight_cap: int = 16
+    # run windows
+    warmup: float = 5.0
+    measure: float = 15.0
+    seed: int = 0
+    # faults / elasticity
+    faults: Sequence[FaultEvent] = ()
+    net_tick: float = 0.1                   # rate refresh for wandering bg
+    staging_capacity: float = 512e9         # per-pod DRAM KV store (multihop)
+
+
+class Simulation:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.loop = EventLoop()
+        self.tree = FatTree(
+            cfg.n_pods, cfg.racks_per_pod, cfg.servers_per_rack, cfg.gpus_per_server,
+            tier_bandwidth=cfg.tier_bandwidth, tier_latency=cfg.tier_latency,
+            n_tor_uplinks=cfg.n_tor_uplinks, n_agg_uplinks=cfg.n_agg_uplinks,
+        )
+        bg = cfg.background
+        self.bg = bg if isinstance(bg, BackgroundTraffic) else BackgroundTraffic(
+            bg, wander=cfg.bg_wander, seed=cfg.seed
+        )
+        self.net = FlowNetwork(self.tree, self.bg, seed=cfg.seed)
+        pre_meta, dec_meta = make_instances(self.tree, tp=cfg.tp, n_prefill=cfg.n_prefill)
+        kv_budget = cfg.hbm_free_per_gpu * cfg.tp
+        self.prefill = [
+            PrefillSim(m.instance_id, m.server, cfg.prefill_model, self.loop)
+            for m in pre_meta
+        ]
+        self.decode = [
+            DecodeSim(m.instance_id, m.server, cfg.iter_model, cfg.beta_max,
+                      kv_budget, cfg.kv_spec, self.loop)
+            for m in dec_meta
+        ]
+        self._server_of = {
+            i.instance_id: i.server for i in (*pre_meta, *dec_meta)
+        }
+        self.oracle = NetworkCostOracle(
+            tier_of=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
+            tier_bandwidth=self.tree.tier_bandwidth,
+            tier_latency=self.tree.tier_latency,
+            telemetry_fn=lambda now: self.net.tier_congestion(now),
+            refresh_interval=cfg.oracle_refresh,
+        )
+        self.inflight = SelfContentionTracker(cap=cfg.inflight_cap)
+        if cfg.scheduler == "netkv-multihop":
+            # Beyond paper (§VII-D): one CPU-DRAM staging store per pod,
+            # hosted on the last rack's first server.
+            stores = []
+            for pod in range(cfg.n_pods):
+                node_id = 1000 + pod
+                self._extra_servers = getattr(self, "_extra_servers", {})
+                srv = (pod, cfg.racks_per_pod - 1, 0)
+                stores.append(StagingStore(
+                    node_id,
+                    capacity_bytes=cfg.staging_capacity,
+                    bytes_per_block=16 * cfg.kv_spec.kv_bytes_per_token or 1.0,
+                ))
+                self._server_of[node_id] = srv
+            self.sched = NetKVMultiHop(
+                cfg.iter_model, cfg.beta_max, m_min=cfg.m_min, stores=stores,
+                **cfg.scheduler_kwargs,
+            )
+        else:
+            self.sched = make_scheduler(
+                cfg.scheduler, cfg.iter_model, cfg.beta_max, m_min=cfg.m_min,
+                **cfg.scheduler_kwargs,
+            )
+        self.records: list[RequestState] = []
+        self.rejected = 0
+        self.decision_latencies: list[float] = []
+        self._net_event = None
+        self._batch_window: list[tuple[RequestState, int]] = []
+        self._batch_timer = None
+        self._inbound: dict[int, list] = {}   # decode id -> [(rs, transfer)]
+        for p in self.prefill:
+            p.on_done = self._on_prefill_done
+        for d in self.decode:
+            d.on_first_token = lambda rs, now: None
+            d.on_finish = lambda rs, now: None
+
+    # ---------------------------------------------------------------- trace
+    def load_trace(self, trace: Sequence[Request]) -> None:
+        for req in trace:
+            rs = RequestState(req=req, kv_bytes=float(self.cfg.kv_spec.kv_bytes(req.input_len)))
+            self.records.append(rs)
+            self.loop.at(req.arrival, lambda now, rs=rs: self._on_arrival(rs, now))
+        for f in self.cfg.faults:
+            self.loop.at(f.time, lambda now, f=f: self._on_fault(f, now))
+        if self.cfg.net_tick > 0:
+            self.loop.after(self.cfg.net_tick, self._net_tick)
+
+    # ------------------------------------------------------------ prefill side
+    def _on_arrival(self, rs: RequestState, now: float) -> None:
+        healthy = [p for p in self.prefill if p.healthy]
+        if not healthy:
+            rs.rejected = True
+            self.rejected += 1
+            return
+        target = min(healthy, key=lambda p: p.eta(now))
+        target.submit(rs, now)
+
+    def _on_prefill_done(self, rs: RequestState, now: float) -> None:
+        if isinstance(self.sched, NetKVBatch) and self.sched.window > 0:
+            self._batch_window.append((rs, rs.prefill_instance))
+            if self._batch_timer is None:
+                self._batch_timer = self.loop.after(self.sched.window, self._flush_batch)
+            return
+        self._schedule_one(rs, now)
+
+    # ------------------------------------------------------------- scheduling
+    def _candidates(self, req: Request) -> list[CandidateState]:
+        return [
+            CandidateState(
+                instance_id=d.instance_id,
+                free_memory=d.free_memory,
+                queued=d.queued,
+                batch_size=d.beta,
+                hit_tokens=float(d.hit_tokens(req)),
+                healthy=d.healthy,
+                iter_scale=d.iter_scale_est,
+            )
+            for d in self.decode
+        ]
+
+    def _schedule_one(self, rs: RequestState, now: float) -> None:
+        req = rs.req
+        info = RequestInfo(req.request_id, req.input_len, rs.kv_bytes)
+        cands = self._candidates(req)
+        view = self.oracle.view(now)
+        if isinstance(self.sched, NetKVMultiHop):
+            self.sched.observe_request(req.block_hashes)
+        t0 = _time.perf_counter()
+        decision = self.sched.select(info, rs.prefill_instance, cands, view, self.inflight)
+        self.decision_latencies.append(_time.perf_counter() - t0)
+        if decision is None:
+            rs.rejected = True
+            self.rejected += 1
+            return
+        self._dispatch(rs, decision, now)
+
+    def _flush_batch(self, now: float) -> None:
+        window, self._batch_window = self._batch_window, []
+        self._batch_timer = None
+        if not window:
+            return
+        reqs = [
+            (RequestInfo(rs.req.request_id, rs.req.input_len, rs.kv_bytes), pid)
+            for rs, pid in window
+        ]
+        per_req_cands = [self._candidates(rs.req) for rs, _ in window]
+        view = self.oracle.view(now)
+        t0 = _time.perf_counter()
+        decisions = self.sched.select_batch(reqs, per_req_cands, view, self.inflight)
+        self.decision_latencies.append((_time.perf_counter() - t0) / len(window))
+        for (rs, pid), dec in zip(window, decisions):
+            if dec is None:
+                rs.rejected = True
+                self.rejected += 1
+            else:
+                self._dispatch(rs, dec, now)
+
+    def _dispatch(self, rs: RequestState, decision, now: float) -> None:
+        rs.sched_time = now
+        rs.decode_instance = decision.instance_id
+        rs.tier = decision.tier
+        rs.s_eff = decision.s_eff
+        dec = self._decode_by_id(decision.instance_id)
+        rs.hit_tokens = float(dec.hit_tokens(rs.req))
+        dec.reserve(rs, now)
+        src = self._server_of[rs.prefill_instance]
+        dst = self._server_of[decision.instance_id]
+        if decision.s_eff <= 0.0:
+            # 100% prefix hit: only base latency applies.
+            lat = self.tree.tier_latency[decision.tier]
+            self.loop.after(lat, lambda t, rs=rs: self._on_transfer_done(rs, None, t))
+            return
+        plan = None
+        if isinstance(self.sched, NetKVMultiHop):
+            plan = self.sched.plans.get(rs.req.request_id)
+        if plan is not None and plan.kind == "staged":
+            # Two parallel legs: store->d (staged) and p->d (remainder).
+            pending = {"n": 0}
+
+            def leg_done(tr, t, rs=rs, pending=pending, plan=plan):
+                pending["n"] -= 1
+                if pending["n"] == 0:
+                    self.sched.staged_leg_done(plan.store_id)
+                    self._on_transfer_done(rs, tr, t)
+
+            store_src = self._server_of[plan.store_id]
+            for leg_src, nbytes in ((store_src, plan.staged_bytes),
+                                    (src, plan.direct_bytes)):
+                if nbytes <= 0:
+                    continue
+                pending["n"] += 1
+                tr = self.net.start_transfer(
+                    leg_src, dst, nbytes, now, on_complete=leg_done,
+                    n_flows=self.cfg.tp)
+                self._inbound.setdefault(decision.instance_id, []).append((rs, tr))
+            if pending["n"] == 0:  # fully resident: latency only
+                lat = self.tree.tier_latency[decision.tier]
+                self.loop.after(lat, lambda t, rs=rs: self._on_transfer_done(rs, None, t))
+            self._reschedule_net(now)
+            return
+        transfer = self.net.start_transfer(
+            src, dst, decision.s_eff, now,
+            on_complete=lambda tr, t, rs=rs: self._on_transfer_done(rs, tr, t),
+            n_flows=self.cfg.tp,
+        )
+        self._inbound.setdefault(decision.instance_id, []).append((rs, transfer))
+        self._reschedule_net(now)
+
+    # -------------------------------------------------------------- transfers
+    def _on_transfer_done(self, rs: RequestState, transfer, now: float) -> None:
+        rs.transfer_end = now
+        if transfer is not None:
+            lst = self._inbound.get(rs.decode_instance, [])
+            self._inbound[rs.decode_instance] = [
+                (r, t) for (r, t) in lst if r is not rs
+            ]
+        if self.sched.uses_self_contention:
+            self.inflight.decr(rs.prefill_instance, rs.tier)
+        if isinstance(self.sched, NetKVMultiHop):
+            # write-through: the landed prefix populates the dst pod's store.
+            pod = self._server_of[rs.decode_instance][0]
+            self.sched.on_transfer_complete(rs.req.block_hashes, 1000 + pod)
+        dec = self._decode_by_id(rs.decode_instance)
+        if not dec.healthy:
+            self._requeue(rs, now)
+            return
+        dec.admit_after_transfer(rs, now)
+        self._reschedule_net(now)
+
+    def _decode_by_id(self, iid: int) -> DecodeSim:
+        for d in self.decode:
+            if d.instance_id == iid:
+                return d
+        raise KeyError(iid)
+
+    def _reschedule_net(self, now: float) -> None:
+        nct = self.net.next_completion_time(now)
+        if nct is None:
+            return
+        if self._net_event is not None:
+            self.loop.cancel(self._net_event)
+        self._net_event = self.loop.at(nct, self._net_fire)
+
+    def _net_fire(self, now: float) -> None:
+        self._net_event = None
+        self.net.advance(now)
+        self._reschedule_net(now)
+
+    def _net_tick(self, now: float) -> None:
+        self.net.refresh_rates(now)
+        self._reschedule_net(now)
+        if not self.loop.empty():
+            self.loop.after(self.cfg.net_tick, self._net_tick)
+
+    # ------------------------------------------------------ faults/elasticity
+    def _on_fault(self, f: FaultEvent, now: float) -> None:
+        if f.kind == "kill_decode":
+            dec = self._decode_by_id(f.instance_id)
+            victims = dec.fail(now)
+            for rs, transfer in self._inbound.pop(f.instance_id, []):
+                self.net.abort_transfer(transfer, now)
+                if self.sched.uses_self_contention:
+                    self.inflight.decr(rs.prefill_instance, rs.tier)
+                victims.append(rs)
+            # Health flips scheduler-visible after the detection delay; until
+            # then new dispatches to this instance bounce and requeue.
+            self.loop.after(f.detection_delay, lambda t, d=dec: None)
+            for rs in victims:
+                self._requeue(rs, now)
+            self._reschedule_net(now)
+        elif f.kind == "slowdown":
+            self._decode_by_id(f.instance_id).iter_scale = f.factor
+        elif f.kind == "add_decode":
+            new_id = max(self._server_of) + 1
+            # Elastic join: place on the least-populated server.
+            srv = self.decode[f.instance_id % len(self.decode)].server
+            d = DecodeSim(new_id, srv, self.cfg.iter_model, self.cfg.beta_max,
+                          self.cfg.hbm_free_per_gpu * self.cfg.tp,
+                          self.cfg.kv_spec, self.loop)
+            self.decode.append(d)
+            self._server_of[new_id] = srv
+        else:
+            raise ValueError(f.kind)
+
+    def _requeue(self, rs: RequestState, now: float) -> None:
+        """Fault path: re-run the request through prefill + scheduling.
+
+        The prefill-side KV buffer was released when the transfer completed,
+        so a decode-side loss after admit requires a fresh prefill; a loss
+        during transfer could reuse the buffer, but we conservatively re-run
+        prefill in both cases (counts in ``requeues``).
+        """
+        rs.requeues += 1
+        rs.decode_instance = -1
+        rs.tokens_out = 0
+        rs.transfer_end = -1.0
+        if rs.requeues > 3:
+            rs.rejected = True
+            self.rejected += 1
+            return
+        self._on_arrival(rs, now)
+
+    # ------------------------------------------------------------------- run
+    def run(self, trace: Sequence[Request], drain: float = 60.0) -> RunMetrics:
+        self.load_trace(trace)
+        horizon = self.cfg.warmup + self.cfg.measure + drain
+        self.loop.run(until=horizon)
+        return summarize(
+            self.records,
+            window=(self.cfg.warmup, self.cfg.warmup + self.cfg.measure),
+            scheduler=self.cfg.scheduler,
+            decision_latencies=self.decision_latencies,
+            rejected=self.rejected,
+        )
+
+
+def run_sim(cfg: SimConfig, trace: Sequence[Request], drain: float = 60.0) -> RunMetrics:
+    return Simulation(cfg).run(trace, drain=drain)

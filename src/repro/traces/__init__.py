@@ -1,0 +1,5 @@
+"""Workload traces: Mooncake-statistics synthetic generator + profiles."""
+
+from .mooncake import PROFILES, Profile, Request, calibrated_capacity_rps, empirical_means, generate_trace, profile_capacity
+
+__all__ = ["PROFILES", "Profile", "Request", "calibrated_capacity_rps", "empirical_means", "generate_trace", "profile_capacity"]

@@ -1,0 +1,13 @@
+"""Training substrate: optimizers, sharded train step, checkpointing, data."""
+
+from .optimizer import AdamW, Adafactor, make_optimizer, opt_state_specs
+from .train_step import make_train_step, microbatch_split
+from .checkpoint import (
+    list_checkpoints,
+    restore_checkpoint,
+    restore_latest,
+    save_checkpoint,
+)
+from .data import synth_batch
+
+__all__ = [k for k in dir() if not k.startswith("_")]

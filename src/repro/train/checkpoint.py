@@ -1,0 +1,78 @@
+"""Checkpoint/restart: atomic, resumable, pure numpy+json (no orbax).
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json, written to a tmp dir and
+renamed atomically so a preemption mid-write never corrupts the latest
+checkpoint.  ``restore_latest`` returns the newest complete step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        arrays = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {"step": step, "n_arrays": len(arrays), "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # Retention: keep the 3 newest.
+    steps = sorted(list_checkpoints(ckpt_dir))
+    for s in steps[:-3]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    return final
+
+
+def list_checkpoints(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+            os.path.join(ckpt_dir, name, "meta.json")
+        ):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure (and dtypes) of ``like``."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    data = np.load(path)
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for keypath, leaf in flat[0]:
+        k = jax.tree_util.keystr(keypath)
+        arr = data[k]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def restore_latest(ckpt_dir: str, like: Any) -> tuple[int, Any] | None:
+    steps = list_checkpoints(ckpt_dir)
+    if not steps:
+        return None
+    step = steps[-1]
+    return step, restore_checkpoint(ckpt_dir, step, like)

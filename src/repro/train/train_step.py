@@ -1,0 +1,81 @@
+"""Sharded train step: grad-accumulated microbatches + remat'd backbone.
+
+Microbatch layout: the global batch (B, ...) is viewed as
+(batch_shards, mb, local/mb, ...) and the mb axis is moved to the front so
+that every microbatch takes an equal slice from every data shard — no shard
+idles during accumulation.  Gradients accumulate in f32 with the same
+sharding as the parameters (FSDP), so the accumulator adds params/num_shards
+bytes per chip.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, forward_train
+from repro.models.sharding import constrain
+
+
+def effective_microbatches(global_batch: int, mb: int, batch_shards: int) -> int:
+    """Largest feasible mb <= requested that divides the per-shard batch."""
+    local = max(global_batch // batch_shards, 1)
+    mb = min(mb, local)
+    while local % mb:
+        mb -= 1
+    return max(mb, 1)
+
+
+def microbatch_split(batch, mb: int, batch_shards: int):
+    def split(x):
+        b = x.shape[0]
+        local = b // batch_shards
+        x = x.reshape(batch_shards, mb, local // mb, *x.shape[1:])
+        x = jnp.moveaxis(x, 1, 0)
+        return x.reshape(mb, b // mb, *x.shape[3:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, microbatches: int = 1,
+                    batch_shards: int = 1, aux_weight: float = 0.01,
+                    accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb_batch):
+        loss, parts = forward_train(cfg, params, mb_batch, aux_weight=aux_weight)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        mb_eff = effective_microbatches(gb, microbatches, batch_shards)
+        if mb_eff <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            mbs = microbatch_split(batch, mb_eff, batch_shards)
+
+            def body(carry, mb_batch):
+                gsum, lsum = carry
+                (loss, _), g = grad_fn(params, mb_batch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gsum, g
+                )
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / mb_eff, gsum)
+            loss = lsum / mb_eff
+            parts = {}
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

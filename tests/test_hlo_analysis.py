@@ -1,0 +1,70 @@
+"""Loop-aware HLO parser validation against hand-built scans."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def hlo_with_scan():
+    """Compile a scanned collective program on a 4-device host mesh in a
+    subprocess (keeps this test process at 1 device)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
+mesh = Mesh(np.asarray(jax.devices()).reshape(4), ("d",))
+def step(x):
+    def body(c, _):
+        y = jax.lax.with_sharding_constraint(c @ c, P("d", None))
+        return y, None
+    out, _ = jax.lax.scan(body, x, None, length=7)
+    return out
+fn = jax.jit(step, in_shardings=NamedSharding(mesh, P("d", None)))
+with mesh:
+    print(fn.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile().as_text())
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                       env={**os.environ})
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r.stdout
+
+
+def test_trip_count_extraction(hlo_with_scan):
+    from repro.launch.hlo_analysis import computation_multipliers, split_computations
+
+    comps, entry = split_computations(hlo_with_scan)
+    assert entry is not None
+    mult = computation_multipliers(hlo_with_scan)
+    # some computation (the while body) must carry multiplier 7
+    assert any(abs(m - 7.0) < 1e-9 for m in mult.values()), mult
+
+
+def test_loop_aware_at_least_raw(hlo_with_scan):
+    from repro.launch.hlo_analysis import collective_bytes_loop_aware
+
+    out = collective_bytes_loop_aware(hlo_with_scan)
+    assert out["total_bytes"] >= out["raw_total_bytes"]
+    # if the scanned matmul produced an in-loop collective, the multiplier
+    # must scale it ~7x
+    if out["raw_total_bytes"] > 0:
+        assert out["total_bytes"] >= 6 * out["raw_total_bytes"] or \
+            out["total_bytes"] == out["raw_total_bytes"]  # collective hoisted
+
+
+def test_no_loops_identity():
+    from repro.launch.hlo_analysis import collective_bytes_loop_aware
+
+    hlo = """HloModule m
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  ROOT %ar = f32[8]{0} all-reduce(f32[8]{0} %a), replica_groups={}
+}
+"""
+    out = collective_bytes_loop_aware(hlo)
+    assert out["total_bytes"] == out["raw_total_bytes"] == 32

@@ -1,0 +1,137 @@
+"""Flow-level network model validation (§VI-B's three analytical checks)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import BackgroundTraffic, FatTree, FlowNetwork, make_instances
+
+
+def _drain(net, until=1e9):
+    now = 0.0
+    while True:
+        nxt = net.next_completion_time(now)
+        if nxt is None or nxt > until:
+            return now
+        now = nxt
+        net.advance(now)
+
+
+def _mono_tree():
+    # deterministic single-uplink fabric: no ECMP randomness
+    return FatTree(n_tor_uplinks=1, n_agg_uplinks=1)
+
+
+class TestAnalyticalValidation:
+    def test_single_transfer_matches_tier_bandwidth(self):
+        """One 4-flow transfer on an idle fabric attains B_tau within 0.1%."""
+        for (src, dst, bw) in [
+            ((0, 0, 0), (0, 0, 1), 100e9 / 8),   # tier 1
+            ((0, 0, 0), (0, 1, 0), 50e9 / 8),    # tier 2
+            ((0, 0, 0), (1, 0, 0), 25e9 / 8),    # tier 3
+        ]:
+            net = FlowNetwork(_mono_tree(), BackgroundTraffic(0.0), seed=0)
+            done = []
+            net.start_transfer(src, dst, 1e9, 0.0, lambda t, n: done.append(n))
+            _drain(net)
+            assert done, (src, dst)
+            assert abs(done[0] - 1e9 / bw) / (1e9 / bw) < 1e-3
+
+    def test_n_flows_each_get_capacity_over_n(self):
+        """N coexisting transfers on one bottleneck each get 1/N."""
+        net = FlowNetwork(_mono_tree(), BackgroundTraffic(0.0), seed=0)
+        n = 4
+        for i in range(n):
+            net.start_transfer((0, 0, i % 2), (1, i % 2, i % 2), 1e9, 0.0,
+                               lambda t, now: None, n_flows=1)
+        rates = [f.rate for f in net.flows.values()]
+        agg_cap = 25e9 / 8  # tier-3 agg uplink is the shared bottleneck
+        assert all(abs(r - agg_cap / n) / (agg_cap / n) < 1e-6 for r in rates)
+
+    def test_fair_share_reconverges_after_completion(self):
+        """Rates re-fill within one event of a flow finishing."""
+        net = FlowNetwork(_mono_tree(), BackgroundTraffic(0.0), seed=0)
+        net.start_transfer((0, 0, 0), (1, 0, 0), 1e8, 0.0, lambda t, n: None, n_flows=1)
+        net.start_transfer((0, 0, 1), (1, 0, 1), 1e9, 0.0, lambda t, n: None, n_flows=1)
+        first = net.next_completion_time(0.0)
+        net.advance(first)
+        # survivor takes the whole agg uplink
+        (f,) = net.flows.values()
+        assert abs(f.rate - 25e9 / 8) / (25e9 / 8) < 1e-6
+
+    def test_background_scales_residual(self):
+        net = FlowNetwork(_mono_tree(), BackgroundTraffic(0.4, wander=0.0), seed=0)
+        net.start_transfer((0, 0, 0), (1, 0, 0), 1e9, 0.0, lambda t, n: None)
+        agg = sum(f.rate for f in net.flows.values())
+        assert abs(agg - 25e9 / 8 * 0.6) / (25e9 / 8 * 0.6) < 1e-6
+
+
+class TestECMP:
+    def test_collisions_happen_below_capacity(self):
+        """Per §VI-B: correlated transfers can collide even below capacity."""
+        tree = FatTree(n_tor_uplinks=2, n_agg_uplinks=2)
+        saw_collision = saw_clean = False
+        for seed in range(40):
+            net = FlowNetwork(tree, BackgroundTraffic(0.0), seed=seed)
+            net.start_transfer((0, 0, 0), (1, 0, 0), 1e9, 0.0, lambda t, n: None)
+            net.start_transfer((0, 0, 1), (1, 0, 1), 1e9, 0.0, lambda t, n: None)
+            rates = sorted(round(f.rate) for f in net.flows.values())
+            total = sum(rates)
+            if total < 2 * 25e9 / 8 * 0.99:
+                saw_collision = True
+            else:
+                saw_clean = True
+        assert saw_collision and saw_clean
+
+
+class TestAbort:
+    def test_abort_releases_capacity(self):
+        net = FlowNetwork(_mono_tree(), BackgroundTraffic(0.0), seed=0)
+        t1 = net.start_transfer((0, 0, 0), (1, 0, 0), 1e9, 0.0, lambda t, n: None)
+        t2 = net.start_transfer((0, 0, 1), (1, 0, 1), 1e9, 0.0, lambda t, n: None)
+        net.abort_transfer(t1, 0.001)
+        (f,) = [f for f in net.flows.values()][:1]
+        assert abs(sum(f.rate for f in net.flows.values()) - 25e9 / 8) < 1
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_work_conservation(data):
+    """Property: total delivered bytes == sum of transfer sizes (no loss/dup)."""
+    tree = FatTree()
+    net = FlowNetwork(tree, BackgroundTraffic(0.0), seed=data.draw(st.integers(0, 999)))
+    total = 0.0
+    servers = [(p, r, s) for p in range(2) for r in range(2) for s in range(2)]
+    for i in range(data.draw(st.integers(1, 6))):
+        src = servers[data.draw(st.integers(0, 7))]
+        dst = servers[data.draw(st.integers(0, 7))]
+        if src == dst:
+            continue
+        b = data.draw(st.floats(1e6, 1e9))
+        total += b
+        net.start_transfer(src, dst, b, 0.0, lambda t, n: None)
+    _drain(net)
+    assert abs(net.bytes_delivered - total) < max(1e-6 * total, 64.0)
+
+
+class TestTopology:
+    def test_tiers(self):
+        t = FatTree()
+        assert t.tier((0, 0, 0), (0, 0, 0)) == 0
+        assert t.tier((0, 0, 0), (0, 0, 1)) == 1
+        assert t.tier((0, 0, 0), (0, 1, 0)) == 2
+        assert t.tier((0, 0, 0), (1, 1, 1)) == 3
+
+    def test_pack_placement_never_colocates(self):
+        """Table VI footnote: tier 0/1 unreached under pack placement."""
+        tree = FatTree()
+        pre, dec = make_instances(tree, tp=4, n_prefill=4, placement="pack")
+        for p in pre:
+            for d in dec:
+                assert tree.tier(p.server, d.server) >= 2
+
+    def test_spread_placement_reaches_low_tiers(self):
+        tree = FatTree()
+        pre, dec = make_instances(tree, tp=4, n_prefill=4, placement="spread")
+        tiers = {tree.tier(p.server, d.server) for p in pre for d in dec}
+        assert 0 in tiers or 1 in tiers
