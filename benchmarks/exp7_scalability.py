@@ -1,6 +1,7 @@
 """Experiment 7 (Table V / Fig. 5): cluster scaling 64 -> 1024 GPUs
 (flow-level), NetKV-vs-CLA* gap + transfer-time divergence + scheduler
-decision latency (Python loop vs vectorised JAX scorer)."""
+decision latency (retired Python loop vs vectorised ClusterView scorer vs
+the Pallas netkv_score kernel, at D in {48, 240, 1008})."""
 
 from __future__ import annotations
 
@@ -55,6 +56,16 @@ def run(quick: bool = False) -> list[dict]:
                   f"xfer={row['xfer_mean']*1e3:.0f}ms "
                   f"lat={row['decision_latency_ms']:.3f}ms")
     write_csv("exp7_scalability", rows)
+    # Per-decision scoring-path comparison at 1024-GPU-class pool sizes:
+    # python loop vs vectorised NumPy vs Pallas kernel (interpret on CPU).
+    from .sched_latency import micro_latency
+
+    micro = micro_latency(with_pallas=not quick)
+    for r in micro:
+        print(f"  exp7 decision-latency D={r['pool']}: "
+              f"python={r['python_ms']:.3f}ms numpy={r['numpy_ms']:.3f}ms "
+              f"({r['speedup']:.1f}x)")
+    write_csv("exp7_decision_latency", micro)
     return rows
 
 

@@ -1,8 +1,11 @@
-"""Scheduler decision latency vs pool size: Python Alg. 1 loop vs the
-vectorised JAX scorer vs the Pallas kernel (interpret mode on CPU).
+"""Scheduler decision latency vs pool size: the retired per-candidate Python
+loop vs the vectorised ClusterView scorer vs the Pallas ``netkv_score``
+kernel (interpret mode on CPU) vs the jitted JAX scorer.
 
 Paper reference point: <1.5 ms per decision at 1024 GPUs (256 decode
-instances).  The JAX scorer must stay microseconds out to 16k instances."""
+instances).  The vectorised NumPy path must beat the Python loop by >=5x at
+1008 candidates; the JAX scorer must stay microseconds out to 16k instances.
+"""
 
 from __future__ import annotations
 
@@ -10,45 +13,105 @@ import time
 
 import numpy as np
 
-from repro.core import CandidateState, H100_TP4_ITER, RequestInfo, make_scheduler
+from repro.core import (
+    CandidateState,
+    ClusterView,
+    H100_TP4_ITER,
+    RequestInfo,
+    make_reference_scheduler,
+    make_scheduler,
+)
 from repro.core.netkv_jax import JaxNetKV, PoolArrays
 from repro.core.oracle import OracleView, PAPER_TIER_BANDWIDTH, PAPER_TIER_LATENCY
 
 from .common import emit, write_csv
 
-POOLS = [12, 64, 256, 1024, 4096, 16384]
+# D sweep for the 3-way comparison (48 / 240 / 1008 = 1024-GPU-class pools);
+# the two largest pools run the vectorised + jitted paths only.
+POOLS = [48, 240, 1008]
+POOLS_BIG = [4096, 16384]
+
+REQ = RequestInfo(0, 8192, 8192 * 320 * 1024)
+
+
+def _pool(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cands = [
+        CandidateState(i, float(rng.uniform(1e10, 4e11)),
+                       int(rng.integers(0, 8)), int(rng.integers(0, 64)),
+                       float(rng.integers(0, 8192)))
+        for i in range(n)
+    ]
+    tiers = rng.integers(0, 4, n)
+    view = OracleView(lambda p, d: int(tiers[d % n]), PAPER_TIER_BANDWIDTH,
+                      PAPER_TIER_LATENCY, {t: 0.2 for t in range(4)})
+    cv = ClusterView.from_candidates(cands, tier_fn=view.tier_of)
+    cv.tier_row(0)  # warm the static row cache, as the simulator's view has
+    return cands, cv, view
+
+
+def _time_select(sched, target, view, reps: int) -> float:
+    sched.select(REQ, 0, target, view, None)  # warm (jit/interpret compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        sched.select(REQ, 0, target, view, None)
+    return (time.perf_counter() - t0) / reps
+
+
+def micro_latency(pools=POOLS, with_pallas: bool = True, seed: int = 0) -> list[dict]:
+    """Per-decision latency of netkv-full under each scoring path."""
+    rows = []
+    for n in pools:
+        cands, cv, view = _pool(n, seed)
+        reps = max(200 // max(n // 64, 1), 5)
+        t_py = _time_select(
+            make_reference_scheduler("netkv-full", H100_TP4_ITER, 64),
+            cands, view, reps)
+        t_np = _time_select(
+            make_scheduler("netkv-full", H100_TP4_ITER, 64), cv, view, 200)
+        row = dict(pool=n, python_ms=t_py * 1e3, numpy_ms=t_np * 1e3,
+                   speedup=t_py / t_np)
+        if with_pallas:
+            t_pl = _time_select(
+                make_scheduler("netkv-full", H100_TP4_ITER, 64, backend="pallas"),
+                cv, view, 20)
+            row["pallas_ms"] = t_pl * 1e3
+        rows.append(row)
+    return rows
 
 
 def run(quick: bool = False) -> list[dict]:
-    pools = POOLS[:4] if quick else POOLS
-    rng = np.random.default_rng(0)
-    req = RequestInfo(0, 8192, 8192 * 320 * 1024)
-    rows = []
-    for n in pools:
-        cands = [CandidateState(i, float(rng.uniform(1e10, 4e11)),
-                                int(rng.integers(0, 8)), int(rng.integers(0, 64)),
-                                float(rng.integers(0, 8192)))
-                 for i in range(n)]
-        tiers = rng.integers(0, 4, n)
-        view = OracleView(lambda p, d: int(tiers[d % n]), PAPER_TIER_BANDWIDTH,
-                          PAPER_TIER_LATENCY, {t: 0.2 for t in range(4)})
-        # python loop
-        py = make_scheduler("netkv-full", H100_TP4_ITER, 64)
-        reps = max(200 // max(n // 64, 1), 5)
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            py.select(req, 0, cands, view, None)
-        t_py = (time.perf_counter() - t0) / reps
-        # jitted scorer (steady state: exclude compile)
-        jx = JaxNetKV(H100_TP4_ITER, 64)
-        pool = PoolArrays.from_candidates(cands, tiers)
-        jx.select_arrays(pool, req.kv_bytes, req.input_len, view, [0] * 4)
+    # quick (the CI smoke) skips the interpret-mode Pallas arm: it measures
+    # interpreter overhead, not a regression signal, and dominates wall-clock.
+    rows = micro_latency(POOLS, with_pallas=not quick)
+    # Jitted JAX scorer: steady state, compile excluded.
+    jx = JaxNetKV(H100_TP4_ITER, 64)
+    for row in rows:
+        _, cv, view = _pool(row["pool"])
+        pa = PoolArrays.from_view(cv, 0)
+        jx.select_arrays(pa, REQ.kv_bytes, REQ.input_len, view, [0] * 4)
         t0 = time.perf_counter()
         for _ in range(50):
-            jx.select_arrays(pool, req.kv_bytes, req.input_len, view, [0] * 4)
-        t_jax = (time.perf_counter() - t0) / 50
-        rows.append(dict(pool=n, python_ms=t_py * 1e3, jax_ms=t_jax * 1e3))
-        print(f"  sched_latency n={n}: python={t_py*1e3:.3f}ms jax={t_jax*1e3:.3f}ms")
+            jx.select_arrays(pa, REQ.kv_bytes, REQ.input_len, view, [0] * 4)
+        row["jax_ms"] = (time.perf_counter() - t0) / 50 * 1e3
+    if not quick:
+        for n in POOLS_BIG:
+            _, cv, view = _pool(n)
+            t_np = _time_select(
+                make_scheduler("netkv-full", H100_TP4_ITER, 64), cv, view, 100)
+            pa = PoolArrays.from_view(cv, 0)
+            jx.select_arrays(pa, REQ.kv_bytes, REQ.input_len, view, [0] * 4)
+            t0 = time.perf_counter()
+            for _ in range(50):
+                jx.select_arrays(pa, REQ.kv_bytes, REQ.input_len, view, [0] * 4)
+            rows.append(dict(pool=n, python_ms=float("nan"),
+                             numpy_ms=t_np * 1e3, speedup=float("nan"),
+                             pallas_ms=float("nan"),
+                             jax_ms=(time.perf_counter() - t0) / 50 * 1e3))
+    for r in rows:
+        print(f"  sched_latency n={r['pool']}: python={r['python_ms']:.3f}ms "
+              f"numpy={r['numpy_ms']:.3f}ms pallas={r.get('pallas_ms', float('nan')):.3f}ms "
+              f"jax={r['jax_ms']:.3f}ms speedup={r['speedup']:.1f}x")
     write_csv("sched_latency", rows)
     return rows
 
@@ -56,9 +119,10 @@ def run(quick: bool = False) -> list[dict]:
 def main(quick: bool = False) -> None:
     t0 = time.time()
     rows = run(quick)
-    big = rows[-1]
+    big = next(r for r in rows if r["pool"] == 1008)
     emit("sched_latency", (time.time() - t0) * 1e6 / max(len(rows), 1),
-         f"pool{big['pool']}:py={big['python_ms']:.2f}ms,jax={big['jax_ms']:.2f}ms")
+         f"pool{big['pool']}:py={big['python_ms']:.2f}ms,"
+         f"np={big['numpy_ms']:.3f}ms,{big['speedup']:.0f}x")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from .oracle import (
     TransferIntent,
     TIERS,
 )
+from .view import ClusterView, as_cluster_view
 from .schedulers import (
     CandidateState,
     CacheAware,
@@ -43,6 +44,7 @@ from .schedulers import (
     make_scheduler,
 )
 from .batch_assign import NetKVBatch
+from .reference import REFERENCE_LADDER, make_reference_scheduler
 from .propositions import (
     Prop1Instance,
     prop1_condition,

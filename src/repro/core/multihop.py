@@ -19,18 +19,22 @@ transfers populate the stores (write-through), so hot shared prefixes
 migrate close to every pod — cutting cross-pod bytes beyond what
 decode-local prefix caches can.
 
-Cost arithmetic reuses Eqs. (2)-(4) per hop; Prop. 2's staleness tolerance
-applies hop-wise.
+Cost arithmetic reuses Eqs. (2)-(4) per hop as vectorised array ops over the
+``ClusterView`` columns: each store contributes one candidate-wide leg-time
+vector, and the plan choice is an elementwise min across plans.  Prop. 2's
+staleness tolerance applies hop-wise.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
-from .cost import effective_bandwidth, transfer_time
-from .oracle import OracleView, SelfContentionTracker
-from .schedulers import CandidateState, Decision, NetKVFull, RequestInfo
+import numpy as np
+
+from .oracle import TIERS
+from .schedulers import Decision, NetKVFull, v_transfer_time
+from .view import as_cluster_view
 
 
 @dataclasses.dataclass
@@ -97,63 +101,65 @@ class NetKVMultiHop(NetKVFull):
         """Simulator hook: the current request's block-hash sequence."""
         self._req_hashes = tuple(block_hashes)
 
-    def _plan(self, req: RequestInfo, cand: CandidateState, prefill_id: int,
-              oracle: OracleView, inflight) -> HopPlan:
-        t_direct, tier, s_eff = self._xfer(req, cand, prefill_id, oracle, inflight)
-        best = HopPlan("direct", t_xfer=t_direct, direct_bytes=s_eff)
-        if s_eff <= 0 or not self._req_hashes:
-            return best
-        bytes_per_tok = req.kv_bytes / max(req.input_len, 1)
+    def select(self, req, prefill_id, cands, oracle, inflight=None):
+        cv = as_cluster_view(cands, oracle)
+        s_eff, mask = self._prep(req, cv)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
+            return None
+        tier_row = cv.tier_row(prefill_id)
+        # Direct plan: one p->d leg under Alg. 1's information set.
+        t_best = self._xfer_vec(req, cv, prefill_id, oracle, inflight, s_eff, tier_row)
+        plan_store = np.full(cv.n, -1, np.int64)       # -1 == direct
+        plan_staged = np.zeros(cv.n)
+        plan_direct = s_eff.copy()
+        # Staged plans: per store, one candidate-wide pair of leg vectors.
         # Tokens already on the decode candidate are not refetched from
         # anywhere; staging competes only for the remainder.
-        for store in self.stores:
-            hit_blocks = store.hit_blocks(self._req_hashes)
-            hit_tokens = min(hit_blocks * self.block_tokens, req.input_len)
-            extra = max(hit_tokens - cand.hit_tokens, 0.0)
-            if extra <= 0:
-                continue
-            staged_bytes = extra * bytes_per_tok
-            direct_bytes = max(s_eff - staged_bytes, 0.0)
-            s_tier = oracle.tier_of(store.node_id, cand.instance_id)
-            c = self._congestion(oracle, s_tier)
-            bw = min(oracle.tier_bandwidth[s_tier], store.dram_bw)
-            n_store = self.store_inflight.get(store.node_id, 0)
-            t_staged_leg = transfer_time(staged_bytes, bw, c, n_store,
-                                         oracle.tier_latency[s_tier])
-            p_tier = oracle.tier_of(prefill_id, cand.instance_id)
-            t_direct_leg = transfer_time(
-                direct_bytes, oracle.tier_bandwidth[p_tier],
-                self._congestion(oracle, p_tier),
-                self._n_inflight(inflight, prefill_id, p_tier),
-                oracle.tier_latency[p_tier],
-            )
-            t = max(t_staged_leg, t_direct_leg)  # parallel fetch
-            if t < best.t_xfer:
-                best = HopPlan("staged", store.node_id, t, staged_bytes,
-                               direct_bytes)
-        return best
-
-    def select(self, req, prefill_id, cands, oracle, inflight=None):
-        feas = self.feasible(req, cands)
-        if not feas:
-            return None
-        best_c, best_plan, best_cost, best_tie = None, None, float("inf"), 2.0
-        for c in feas:
-            plan = self._plan(req, c, prefill_id, oracle, inflight)
-            cost = plan.t_xfer + self._t_queue(c) + self._t_decode(c)
-            tie = self._tie()
-            if cost < best_cost or (cost == best_cost and tie < best_tie):
-                best_c, best_plan, best_cost, best_tie = c, plan, cost, tie
-        assert best_c is not None
-        tier = oracle.tier_of(prefill_id, best_c.instance_id)
+        if self._req_hashes:
+            hit = cv.column("hit_tokens")
+            bytes_per_tok = req.kv_bytes / max(req.input_len, 1)
+            cong = self._congestion_by_tier(oracle)
+            n_by = self._n_by_tier(inflight, prefill_id)
+            for store in self.stores:
+                hit_blocks = store.hit_blocks(self._req_hashes)
+                hit_tokens = min(hit_blocks * self.block_tokens, req.input_len)
+                extra = np.maximum(hit_tokens - hit, 0.0)
+                staged_bytes = extra * bytes_per_tok
+                direct_bytes = np.maximum(s_eff - staged_bytes, 0.0)
+                s_tier_row = cv.tier_row(store.node_id)
+                bw_capped = {t: min(oracle.tier_bandwidth[t], store.dram_bw)
+                             for t in TIERS}
+                n_store = self.store_inflight.get(store.node_id, 0)
+                t_staged_leg = v_transfer_time(
+                    staged_bytes, s_tier_row, bw_capped, cong,
+                    {t: n_store for t in TIERS}, oracle.tier_latency)
+                t_direct_leg = v_transfer_time(
+                    direct_bytes, tier_row, oracle.tier_bandwidth, cong, n_by,
+                    oracle.tier_latency)
+                t = np.maximum(t_staged_leg, t_direct_leg)  # parallel fetch
+                better = (s_eff > 0.0) & (extra > 0.0) & (t < t_best)
+                t_best = np.where(better, t, t_best)
+                plan_store = np.where(better, store.node_id, plan_store)
+                plan_staged = np.where(better, staged_bytes, plan_staged)
+                plan_direct = np.where(better, direct_bytes, plan_direct)
+        cost = t_best + self._t_queue_vec(cv) + self._t_decode_vec(cv)
+        j = int(idx[np.lexsort((self._ties(idx.size), cost[idx]))[0]])
+        tier = int(tier_row[j])
+        staged = plan_store[j] >= 0
+        best_plan = HopPlan(
+            "staged" if staged else "direct",
+            int(plan_store[j]), float(t_best[j]),
+            float(plan_staged[j]) if staged else 0.0, float(plan_direct[j]),
+        )
         if inflight is not None and best_plan.kind == "direct":
             inflight.incr(prefill_id, tier)
         if best_plan.kind == "staged":
-            self.store_inflight[best_plan.store_id] =                 self.store_inflight.get(best_plan.store_id, 0) + 1
+            self.store_inflight[best_plan.store_id] = \
+                self.store_inflight.get(best_plan.store_id, 0) + 1
         self.plans[req.request_id] = best_plan
-        s_eff = self._s_eff(req, best_c)
-        d = Decision(best_c.instance_id, best_cost, best_plan.t_xfer, tier, s_eff)
-        return d
+        return Decision(int(cv.ids[j]), float(cost[j]), best_plan.t_xfer, tier,
+                        float(s_eff[j]))
 
     def on_transfer_complete(self, block_hashes: Sequence, store_id: int | None = None):
         """Write-through: landed prefixes populate the (nearest) store."""

@@ -47,6 +47,19 @@ class PoolArrays:
             iter_scale=jnp.asarray([c.iter_scale for c in cands], jnp.float32),
         )
 
+    @staticmethod
+    def from_view(cv, prefill_id: int) -> "PoolArrays":
+        """Zero-copy-ish snapshot of a ClusterView's columns + tier row."""
+        return PoolArrays(
+            free_memory=jnp.asarray(cv.column("free_memory"), jnp.float32),
+            queued=jnp.asarray(cv.column("queued"), jnp.int32),
+            batch=jnp.asarray(cv.column("batch"), jnp.int32),
+            hit_tokens=jnp.asarray(cv.column("hit_tokens"), jnp.float32),
+            tier=jnp.asarray(cv.tier_row(prefill_id), jnp.int32),
+            healthy=jnp.asarray(cv.column("healthy"), bool),
+            iter_scale=jnp.asarray(cv.column("iter_scale"), jnp.float32),
+        )
+
 
 @functools.partial(jax.jit, static_argnames=("beta_max",))
 def score_pool(

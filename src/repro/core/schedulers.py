@@ -1,4 +1,5 @@
-"""Decode-instance selection policies (Algorithm 1 + the baseline ladder).
+"""Decode-instance selection policies (Algorithm 1 + the baseline ladder),
+vectorised over the ``ClusterView`` struct-of-arrays state plane.
 
 Every policy is a *scorer plugin* with the same call signature, mirroring the
 paper's deployment story (llm-d Endpoint Picker scorer chain / Dynamo KV
@@ -16,6 +17,15 @@ router scoring fn).  The ladder, in ablation order (§VI-H):
   NetKVBatch        -> beyond paper: batch-level joint assignment (§VII-C
                        'future work'), see batch_assign.py
 
+Scoring is one pass of NumPy array ops over the view's columns — feasibility
+mask, s_eff, T_xfer, T_queue, T_decode as Eq. (2)-(7) vectors — instead of a
+per-candidate Python loop; ``NetKVFull(backend="pallas")`` routes the fused
+Eq. (2)-(7) + argmin through the Pallas ``netkv_score`` kernel (interpret
+mode off-TPU).  Decisions, rejection behaviour, and deterministic
+tie-breaking are bit-identical to the retired loop kept in ``reference.py``
+(see tests/test_view_parity.py).  ``select`` accepts either a maintained
+``ClusterView`` or a legacy ``CandidateState`` sequence (coerced).
+
 All policies share the same feasibility filter (line 1 of Alg. 1) and return
 ``None`` to signal rejection (line 2).
 """
@@ -30,17 +40,20 @@ import numpy as np
 from .cost import (
     IterTimeModel,
     effective_bandwidth,
-    effective_transfer_bytes,
-    first_decode_time,
-    queue_time,
     transfer_time,
 )
-from .oracle import OracleView, SelfContentionTracker, EWMACongestionPredictor
+from .oracle import OracleView, SelfContentionTracker, EWMACongestionPredictor, TIERS
+from .view import ClusterView, as_cluster_view
 
 
 @dataclasses.dataclass
 class CandidateState:
-    """Scheduler-visible state of one decode instance (§III-C)."""
+    """Scheduler-visible state of one decode instance (§III-C).
+
+    Retained as the row-at-a-time compatibility type: ``select`` coerces a
+    sequence of these into a one-shot ``ClusterView``.  The simulator itself
+    maintains a columnar view and never builds these.
+    """
 
     instance_id: int
     free_memory: float          # m_d, bytes
@@ -69,8 +82,53 @@ class Decision:
     s_eff: float                # effective bytes to move
 
 
+# --------------------------------------------------------------------------
+# Vectorised cost components: Eq. (2)-(7) as array ops over view columns.
+# Operation order matches the scalar helpers in cost.py exactly so results
+# stay bit-identical to the per-candidate reference loop.
+# --------------------------------------------------------------------------
+
+def v_iter_time(iter_model: IterTimeModel, beta: np.ndarray) -> np.ndarray:
+    """t_iter(beta) elementwise, including the optional piecewise segments."""
+    t = iter_model.a + iter_model.b * np.maximum(beta, 0.0)
+    for brk, slope in zip(iter_model.breaks, iter_model.slopes):
+        t = np.where(beta > brk, t + slope * (beta - brk), t)
+    return t
+
+
+def v_s_eff(kv_bytes: float, hit_tokens: np.ndarray, input_len: int) -> np.ndarray:
+    """Eq. (2): s_eff = s_r * (1 - lambda/l), hit clamped to [0, l]."""
+    if input_len <= 0:
+        return np.zeros_like(hit_tokens)
+    l = float(input_len)
+    frac = np.minimum(np.maximum(hit_tokens, 0.0), l) / l
+    return kv_bytes * (1.0 - frac)
+
+
+def v_transfer_time(
+    s_eff: np.ndarray,
+    tier_row: np.ndarray,
+    tier_bandwidth,
+    congestion_by_tier,
+    n_by_tier,
+    tier_latency,
+) -> np.ndarray:
+    """Eq. (3)-(4) gathered through the per-candidate tier row.
+
+    Per-tier effective bandwidths are computed with the scalar cost.py
+    helper (4 values), then gathered — identical arithmetic to the loop.
+    """
+    beff = np.array(
+        [effective_bandwidth(tier_bandwidth[t], congestion_by_tier[t], n_by_tier[t])
+         for t in TIERS], np.float64,
+    )
+    lat = np.array([tier_latency[t] for t in TIERS], np.float64)
+    lat_row = lat[tier_row]
+    return np.where(s_eff <= 0.0, lat_row, s_eff / beff[tier_row] + lat_row)
+
+
 class Scheduler:
-    """Base: feasibility filter + shared component models."""
+    """Base: feasibility mask + shared vectorised component models."""
 
     name = "base"
     uses_tier = False            # static tier map
@@ -84,64 +142,55 @@ class Scheduler:
         self.m_min = m_min
         # Unbiased deterministic tie-breaking: scoring ties must not collapse
         # onto low instance ids (that would topology-bias network-oblivious
-        # policies, since ids order pods).
+        # policies, since ids order pods).  One draw per feasible candidate,
+        # in candidate order — the same RNG stream the reference loop reads.
         self._rng = np.random.default_rng(seed + 0xC0FFEE)
 
-    def _tie(self) -> float:
-        return float(self._rng.random())
+    def _ties(self, k: int) -> np.ndarray:
+        return self._rng.random(k)
 
-    # -- shared helpers -----------------------------------------------------
-    def _s_eff(self, req: RequestInfo, cand: CandidateState) -> float:
-        return effective_transfer_bytes(req.kv_bytes, cand.hit_tokens, req.input_len)
+    # -- shared vector components -------------------------------------------
+    def _prep(self, req: RequestInfo, cv: ClusterView):
+        """(s_eff vector, feasibility mask) — line 1 of Alg. 1."""
+        s_eff = v_s_eff(req.kv_bytes, cv.column("hit_tokens"), req.input_len)
+        mask = cv.column("healthy") & (cv.column("free_memory") >= s_eff + self.m_min)
+        return s_eff, mask
 
-    def feasible(self, req: RequestInfo, cands: Sequence[CandidateState]):
-        return [
-            c for c in cands
-            if c.healthy and c.free_memory >= self._s_eff(req, c) + self.m_min
-        ]
+    def _t_queue_vec(self, cv: ClusterView) -> np.ndarray:
+        """Eq. (6) scaled by the straggler estimate."""
+        beta = cv.column("batch")
+        blocked = np.maximum(0, cv.column("queued") - (self.beta_max - beta))
+        return cv.column("iter_scale") * (blocked * v_iter_time(self.iter_model, beta))
 
-    def _t_queue(self, cand: CandidateState) -> float:
-        return cand.iter_scale * queue_time(
-            cand.queued, cand.batch_size, self.beta_max, self.iter_model
-        )
+    def _t_decode_vec(self, cv: ClusterView) -> np.ndarray:
+        """Eq. (7) scaled by the straggler estimate."""
+        return cv.column("iter_scale") * v_iter_time(self.iter_model, cv.column("batch") + 1)
 
-    def _t_decode(self, cand: CandidateState) -> float:
-        return cand.iter_scale * first_decode_time(cand.batch_size, self.iter_model)
+    def _congestion_by_tier(self, oracle: OracleView) -> dict[int, float]:
+        if self.uses_congestion:
+            return {t: oracle.congestion.get(t, 0.0) for t in TIERS}
+        return {t: 0.0 for t in TIERS}
 
-    def _xfer(
-        self,
-        req: RequestInfo,
-        cand: CandidateState,
-        prefill_id: int,
-        oracle: OracleView,
-        inflight: Optional[SelfContentionTracker],
-    ) -> tuple[float, int, float]:
-        """(T_xfer, tier, s_eff) under this policy's information set."""
-        tier = oracle.tier_of(prefill_id, cand.instance_id)
-        s_eff = self._s_eff(req, cand)
-        c = self._congestion(oracle, tier)
-        n = self._n_inflight(inflight, prefill_id, tier)
-        t = transfer_time(
-            s_eff, oracle.tier_bandwidth[tier], c, n, oracle.tier_latency[tier]
-        )
-        return t, tier, s_eff
-
-    def _congestion(self, oracle: OracleView, tier: int) -> float:
-        return oracle.congestion.get(tier, 0.0) if self.uses_congestion else 0.0
-
-    def _n_inflight(
-        self, inflight: Optional[SelfContentionTracker], prefill_id: int, tier: int
-    ) -> int:
+    def _n_by_tier(self, inflight: Optional[SelfContentionTracker],
+                   prefill_id: int) -> dict[int, int]:
         if self.uses_self_contention and inflight is not None:
-            return inflight.get(prefill_id, tier)
-        return 0
+            return {t: inflight.get(prefill_id, t) for t in TIERS}
+        return {t: 0 for t in TIERS}
+
+    def _xfer_vec(self, req, cv, prefill_id, oracle, inflight, s_eff, tier_row):
+        """T_xfer vector under this policy's information set."""
+        return v_transfer_time(
+            s_eff, tier_row, oracle.tier_bandwidth,
+            self._congestion_by_tier(oracle), self._n_by_tier(inflight, prefill_id),
+            oracle.tier_latency,
+        )
 
     # -- interface ----------------------------------------------------------
     def select(
         self,
         req: RequestInfo,
         prefill_id: int,
-        cands: Sequence[CandidateState],
+        cands,  # ClusterView | Sequence[CandidateState]
         oracle: OracleView,
         inflight: Optional[SelfContentionTracker] = None,
     ) -> Optional[Decision]:
@@ -156,14 +205,16 @@ class RoundRobin(Scheduler):
         self._next = 0
 
     def select(self, req, prefill_id, cands, oracle, inflight=None):
-        feas = self.feasible(req, cands)
-        if not feas:
+        cv = as_cluster_view(cands, oracle)
+        s_eff, mask = self._prep(req, cv)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
             return None
-        feas.sort(key=lambda c: c.instance_id)
-        cand = feas[self._next % len(feas)]
+        j = int(idx[np.argsort(cv.ids[idx])[self._next % idx.size]])
         self._next += 1
-        tier = oracle.tier_of(prefill_id, cand.instance_id)
-        return Decision(cand.instance_id, 0.0, 0.0, tier, self._s_eff(req, cand))
+        iid = int(cv.ids[j])
+        tier = oracle.tier_of(prefill_id, iid)
+        return Decision(iid, 0.0, 0.0, tier, float(s_eff[j]))
 
 
 class LoadAware(Scheduler):
@@ -172,18 +223,16 @@ class LoadAware(Scheduler):
     name = "la"
 
     def select(self, req, prefill_id, cands, oracle, inflight=None):
-        feas = self.feasible(req, cands)
-        if not feas:
+        cv = as_cluster_view(cands, oracle)
+        s_eff, mask = self._prep(req, cv)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
             return None
-        best = min(feas, key=lambda c: (self._t_queue(c) + self._t_decode(c), self._tie()))
-        tier = oracle.tier_of(prefill_id, best.instance_id)
-        return Decision(
-            best.instance_id,
-            self._t_queue(best) + self._t_decode(best),
-            0.0,
-            tier,
-            self._s_eff(req, best),
-        )
+        load = self._t_queue_vec(cv) + self._t_decode_vec(cv)
+        j = int(idx[np.lexsort((self._ties(idx.size), load[idx]))[0]])
+        iid = int(cv.ids[j])
+        tier = oracle.tier_of(prefill_id, iid)
+        return Decision(iid, float(load[j]), 0.0, tier, float(s_eff[j]))
 
 
 class CacheAware(Scheduler):
@@ -192,15 +241,17 @@ class CacheAware(Scheduler):
     name = "ca"
 
     def select(self, req, prefill_id, cands, oracle, inflight=None):
-        feas = self.feasible(req, cands)
-        if not feas:
+        cv = as_cluster_view(cands, oracle)
+        s_eff, mask = self._prep(req, cv)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
             return None
-        best = min(
-            feas,
-            key=lambda c: (-c.hit_tokens, self._t_queue(c) + self._t_decode(c), self._tie()),
-        )
-        tier = oracle.tier_of(prefill_id, best.instance_id)
-        return Decision(best.instance_id, -best.hit_tokens, 0.0, tier, self._s_eff(req, best))
+        neg_hit = -cv.column("hit_tokens")
+        load = self._t_queue_vec(cv) + self._t_decode_vec(cv)
+        j = int(idx[np.lexsort((self._ties(idx.size), load[idx], neg_hit[idx]))[0]])
+        iid = int(cv.ids[j])
+        tier = oracle.tier_of(prefill_id, iid)
+        return Decision(iid, float(neg_hit[j]), 0.0, tier, float(s_eff[j]))
 
 
 class CacheLoadAware(Scheduler):
@@ -217,47 +268,102 @@ class CacheLoadAware(Scheduler):
         self.w_cache = w_cache
         self.w_load = w_load
 
-    def _score(self, req: RequestInfo, cand: CandidateState) -> float:
-        miss = 1.0 - min(cand.hit_tokens, req.input_len) / max(req.input_len, 1)
-        load = (self._t_queue(cand) + self._t_decode(cand)) / self.iter_model(self.beta_max)
+    def _score_vec(self, req: RequestInfo, cv: ClusterView) -> np.ndarray:
+        miss = 1.0 - np.minimum(cv.column("hit_tokens"), req.input_len) / max(req.input_len, 1)
+        load = (self._t_queue_vec(cv) + self._t_decode_vec(cv)) / self.iter_model(self.beta_max)
         return self.w_cache * miss + self.w_load * load
 
     def select(self, req, prefill_id, cands, oracle, inflight=None):
-        feas = self.feasible(req, cands)
-        if not feas:
+        cv = as_cluster_view(cands, oracle)
+        s_eff, mask = self._prep(req, cv)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
             return None
-        best = min(feas, key=lambda c: (self._score(req, c), self._tie()))
-        tier = oracle.tier_of(prefill_id, best.instance_id)
-        return Decision(
-            best.instance_id, self._score(req, best), 0.0, tier, self._s_eff(req, best)
-        )
+        score = self._score_vec(req, cv)
+        j = int(idx[np.lexsort((self._ties(idx.size), score[idx]))[0]])
+        iid = int(cv.ids[j])
+        tier = oracle.tier_of(prefill_id, iid)
+        return Decision(iid, float(score[j]), 0.0, tier, float(s_eff[j]))
 
 
 class NetKVFull(Scheduler):
-    """Algorithm 1: C[d] = T_xfer + T_queue + T_decode, full oracle."""
+    """Algorithm 1: C[d] = T_xfer + T_queue + T_decode, full oracle.
+
+    ``backend="numpy"`` (default) evaluates Eq. (2)-(7) as one pass of f64
+    array ops — bit-identical to the reference loop.  ``backend="pallas"``
+    routes the fused scoring + masked argmin through the Pallas
+    ``netkv_score`` kernel (f32, lowest-index tie-break; interpret mode
+    off-TPU) — parity on the winner is asserted with a cost tolerance.
+    """
 
     name = "netkv-full"
     uses_tier = True
     uses_self_contention = True
     uses_congestion = True
 
+    def __init__(self, *args, backend: str = "numpy",
+                 pallas_interpret: bool | None = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        if backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown scoring backend {backend!r}")
+        if backend == "pallas" and self.iter_model.breaks:
+            raise ValueError("pallas backend supports linear iter models only")
+        self.backend = backend
+        self._pallas_interpret = pallas_interpret
+
     def select(self, req, prefill_id, cands, oracle, inflight=None):
-        feas = self.feasible(req, cands)
-        if not feas:
+        cv = as_cluster_view(cands, oracle)
+        s_eff, mask = self._prep(req, cv)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
             return None
-        best, best_cost, best_x, best_tier, best_seff = None, float("inf"), 0.0, 0, 0.0
-        best_tie = 2.0
-        for c in feas:
-            t_x, tier, s_eff = self._xfer(req, c, prefill_id, oracle, inflight)
-            cost = t_x + self._t_queue(c) + self._t_decode(c)
-            tie = self._tie()
-            if cost < best_cost or (cost == best_cost and tie < best_tie):
-                best, best_cost, best_x, best_tier, best_seff = c, cost, t_x, tier, s_eff
-                best_tie = tie
-        assert best is not None
+        tier_row = cv.tier_row(prefill_id)
+        if self.backend == "pallas":
+            return self._select_pallas(
+                req, prefill_id, cv, oracle, inflight, s_eff, tier_row)
+        t_x = self._xfer_vec(req, cv, prefill_id, oracle, inflight, s_eff, tier_row)
+        cost = t_x + self._t_queue_vec(cv) + self._t_decode_vec(cv)
+        j = int(idx[np.lexsort((self._ties(idx.size), cost[idx]))[0]])
+        best_tier = int(tier_row[j])
         if inflight is not None:
             inflight.incr(prefill_id, best_tier)  # line 14; decremented on done
-        return Decision(best.instance_id, best_cost, best_x, best_tier, best_seff)
+        return Decision(int(cv.ids[j]), float(cost[j]), float(t_x[j]),
+                        best_tier, float(s_eff[j]))
+
+    # -- Pallas scoring path ------------------------------------------------
+    def _select_pallas(self, req, prefill_id, cv, oracle, inflight, s_eff, tier_row):
+        from repro.kernels.netkv_score import BIG, netkv_score
+
+        if self._pallas_interpret is None:
+            import jax
+
+            self._pallas_interpret = jax.default_backend() != "tpu"
+        cong = self._congestion_by_tier(oracle)
+        nfl = self._n_by_tier(inflight, prefill_id)
+        costs, best = netkv_score(
+            cv.column("free_memory"), cv.column("queued"), cv.column("batch"),
+            cv.column("hit_tokens"), tier_row, cv.column("healthy"),
+            cv.column("iter_scale"),
+            [oracle.tier_bandwidth[t] for t in TIERS],
+            [oracle.tier_latency[t] for t in TIERS],
+            [cong[t] for t in TIERS], [nfl[t] for t in TIERS],
+            s_r=float(req.kv_bytes), input_len=float(req.input_len),
+            iter_a=self.iter_model.a, iter_b=self.iter_model.b,
+            m_min=self.m_min, beta_max=self.beta_max,
+            interpret=self._pallas_interpret,
+        )
+        j = int(best)
+        best_cost = float(costs[j])
+        if not best_cost < BIG / 2:  # all candidates masked infeasible
+            return None
+        tier = int(tier_row[j])
+        se = float(s_eff[j])
+        # Decision bookkeeping fields at f64 through the scalar cost model.
+        t_x = transfer_time(se, oracle.tier_bandwidth[tier], cong[tier],
+                            nfl[tier], oracle.tier_latency[tier])
+        if inflight is not None:
+            inflight.incr(prefill_id, tier)
+        return Decision(int(cv.ids[j]), best_cost, t_x, tier, se)
 
 
 class NetKVStatic(NetKVFull):
@@ -276,8 +382,7 @@ class NetKVTopoOnly(NetKVFull):
 
     def select(self, req, prefill_id, cands, oracle, inflight=None):
         # No n_inflight bookkeeping at all on this rung.
-        d = super().select(req, prefill_id, cands, oracle, inflight=None)
-        return d
+        return super().select(req, prefill_id, cands, oracle, inflight=None)
 
 
 class NetKVPredictive(NetKVFull):
@@ -289,9 +394,9 @@ class NetKVPredictive(NetKVFull):
         super().__init__(*args, **kwargs)
         self.predictor = predictor or EWMACongestionPredictor()
 
-    def _congestion(self, oracle: OracleView, tier: int) -> float:
-        self.predictor.update(oracle.congestion)
-        return self.predictor.predict(tier)
+    def _congestion_by_tier(self, oracle: OracleView) -> dict[int, float]:
+        self.predictor.update(oracle.congestion)  # one step per decision
+        return {t: self.predictor.predict(t) for t in TIERS}
 
 
 LADDER = {

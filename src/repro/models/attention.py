@@ -223,7 +223,15 @@ def seq_sharded_decode_attention(q, k_cache, v_cache, pos, k_new, v_new, *,
     re-gather (EXPERIMENTS.md §Perf decode iteration 3).  The self-token
     term is added on shard 0 only.
     """
-    from jax import shard_map
+    # jax promoted shard_map to the top level and renamed check_rep ->
+    # check_vma across releases; resolve whichever this version ships
+    # (mirrors the pltpu.CompilerParams shim).
+    try:
+        from jax import shard_map
+        replication_check = {"check_vma": False}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+        replication_check = {"check_rep": False}
 
     b, _, h, dh = q.shape
     kv = k_cache.shape[2]
@@ -264,6 +272,6 @@ def seq_sharded_decode_attention(q, k_cache, v_cache, pos, k_new, v_new, *,
                   P(bt, sq, None, None), P(), P(bt, None, None, None),
                   P(bt, None, None, None)),
         out_specs=P(bt, None, None, None, None),
-        check_vma=False,
+        **replication_check,
     )(qg, k_cache, v_cache, jnp.asarray(pos, jnp.int32), k_new, v_new)
     return out.reshape(b, 1, h, dh)

@@ -19,7 +19,8 @@ from repro.cluster.network import BackgroundTraffic, FlowNetwork
 from repro.cluster.topology import FatTree, make_instances
 from repro.core.cost import B_TOK, IterTimeModel, PrefillTimeModel
 from repro.core.oracle import NetworkCostOracle, SelfContentionTracker
-from repro.core.schedulers import CandidateState, RequestInfo, make_scheduler
+from repro.core.schedulers import RequestInfo, make_scheduler
+from repro.core.view import ClusterView
 from repro.models.model import ModelConfig, init_params
 from .engine import DecodeEngine, PrefillEngine
 from .transfer import pack_transfer, unpack_transfer
@@ -113,21 +114,20 @@ class DisaggregatedCluster:
             prefill_time = 5e-5 * len(req.prompt) + 0.015
             t_prefill_done = self.clock + prefill_time
 
-            # 2. decode-instance selection (Algorithm 1 over real state).
-            cands = [
-                CandidateState(
-                    instance_id=d.instance_id,
+            # 2. decode-instance selection (Algorithm 1 over columnar state).
+            view = self.oracle.view(t_prefill_done)
+            cv = ClusterView(tier_fn=view.tier_of, capacity=len(self.decode))
+            for d in self.decode:
+                cv.add_instance(
+                    d.instance_id,
                     free_memory=float(len(d.free_slots())) * 1e12,  # slot-gated
                     queued=0,
-                    batch_size=d.beta,
+                    batch=d.beta,
                     hit_tokens=float(self._hit_pages(d.instance_id, req.prompt) * B_TOK),
                     healthy=len(d.free_slots()) > 0,
                 )
-                for d in self.decode
-            ]
             info = RequestInfo(req.request_id, len(req.prompt), float(pre.kv_bytes))
-            view = self.oracle.view(t_prefill_done)
-            decision = self.sched.select(info, pe.instance_id, cands, view, self.inflight)
+            decision = self.sched.select(info, pe.instance_id, cv, view, self.inflight)
             assert decision is not None, "no feasible decode instance"
             de = next(d for d in self.decode if d.instance_id == decision.instance_id)
 

@@ -11,6 +11,14 @@ joining the active batch; each iteration every active request emits one
 token.  Memory: aggregate KV budget; active (pinned) KV plus an LRU block
 cache of completed prefixes (evictable, so it counts as free to the
 scheduler, matching vLLM block-manager semantics).
+
+Scheduler-visible state lives in a shared ``ClusterView`` column plane:
+every DecodeSim mutation writes its (free_memory, queued, batch,
+iter_scale_est) scalars through to its column slot, so scheduling events
+read current cluster state with zero per-request rebuilding.  The one
+column a DecodeSim never writes is ``healthy`` — health becomes
+scheduler-visible only via ``mark_detected`` after the fault detection
+delay (see Simulation._on_fault).
 """
 
 from __future__ import annotations
@@ -20,6 +28,7 @@ from collections import deque
 from typing import Callable, Optional
 
 from repro.core.cost import IterTimeModel, ModelKVSpec, PrefillTimeModel
+from repro.core.view import ClusterView
 from repro.traces.mooncake import Request
 from .engine import EventLoop
 from .kvcache import B_TOK, BlockCache
@@ -107,6 +116,7 @@ class DecodeSim:
         kv_budget: float,
         kv_spec: ModelKVSpec,
         loop: EventLoop,
+        view: Optional[ClusterView] = None,
     ):
         self.instance_id = instance_id
         self.server = server
@@ -127,6 +137,10 @@ class DecodeSim:
         self.iterations = 0
         self.on_first_token: Callable[[RequestState, float], None] | None = None
         self.on_finish: Callable[[RequestState, float], None] | None = None
+        self.view = view
+        self.slot = view.add_instance(
+            instance_id, free_memory=kv_budget, healthy=True
+        ) if view is not None else -1
 
     # ---- scheduler-visible state (§III-C) --------------------------------
     @property
@@ -145,23 +159,47 @@ class DecodeSim:
     def hit_tokens(self, req: Request) -> int:
         return self.cache.hit_tokens(req.block_hashes, req.input_len)
 
+    def _sync(self) -> None:
+        """Write scheduler-visible scalars through to the view column slot."""
+        v = self.view
+        if v is None:
+            return
+        s = self.slot
+        v.free_memory[s] = self.kv_budget - self.pinned_bytes
+        v.queued[s] = len(self.queue)
+        v.batch[s] = len(self.active)
+        v.iter_scale[s] = self.iter_scale_est
+
+    def mark_detected(self, now: float = 0.0) -> None:
+        """Fault detection fired: health becomes scheduler-visible."""
+        if self.view is not None:
+            self.view.healthy[self.slot] = self.healthy
+
     # ---- lifecycle ---------------------------------------------------------
     def reserve(self, rs: RequestState, now: float) -> None:
         """Pin KV for an inbound transfer (memory committed at dispatch)."""
         self.pinned_bytes += rs.kv_bytes
         self.cache.evict_to(self.pinned_bytes)
+        self._sync()
 
     def admit_after_transfer(self, rs: RequestState, now: float) -> None:
         """Transfer landed: blocks now resident; join the batch queue."""
         self.cache.insert(rs.req.block_hashes, protected=self.pinned_bytes)
         self.queue.append(rs)
         self._maybe_iterate(now)
+        self._sync()
 
     def release(self, rs: RequestState) -> None:
         self.pinned_bytes = max(0.0, self.pinned_bytes - rs.kv_bytes)
+        self._sync()
 
     def fail(self, now: float) -> list[RequestState]:
-        """Hard failure: drop all state, return the victims for re-scheduling."""
+        """Hard failure: drop all state, return the victims for re-scheduling.
+
+        Engine-side health flips immediately; the *scheduler-visible*
+        ``healthy`` column only flips when ``mark_detected`` fires after the
+        configured detection delay, so dispatches in the window bounce.
+        """
         self.healthy = False
         victims = list(self.active.values()) + list(self.queue)
         self.active.clear()
@@ -172,6 +210,7 @@ class DecodeSim:
             self.loop.cancel(self._iter_event)
             self._iter_event = None
         self._iterating = False
+        self._sync()
         return victims
 
     # ---- continuous batching ------------------------------------------------
@@ -191,6 +230,7 @@ class DecodeSim:
         if not self.active:
             return
         self._iterating = True
+        self._sync()
         dur = self.iter_model(self.beta) * self.iter_scale
         self._iter_event = self.loop.after(dur, self._iter_done)
 
@@ -222,3 +262,4 @@ class DecodeSim:
                 self.on_finish(rs, now)
         self.cache.evict_to(self.pinned_bytes)
         self._maybe_iterate(now)
+        self._sync()

@@ -26,9 +26,10 @@ from repro.core.cost import (
     PrefillTimeModel,
 )
 from repro.core.oracle import NetworkCostOracle, SelfContentionTracker
-from repro.core.schedulers import CandidateState, RequestInfo, make_scheduler
+from repro.core.schedulers import RequestInfo, make_scheduler
 from repro.core.batch_assign import NetKVBatch
 from repro.core.multihop import NetKVMultiHop, StagingStore
+from repro.core.view import ClusterView
 from repro.cluster.network import BackgroundTraffic, FlowNetwork, Transfer
 from repro.cluster.topology import FatTree, make_instances
 from repro.traces.mooncake import Request
@@ -103,14 +104,21 @@ class Simulation:
             PrefillSim(m.instance_id, m.server, cfg.prefill_model, self.loop)
             for m in pre_meta
         ]
-        self.decode = [
-            DecodeSim(m.instance_id, m.server, cfg.iter_model, cfg.beta_max,
-                      kv_budget, cfg.kv_spec, self.loop)
-            for m in dec_meta
-        ]
         self._server_of = {
             i.instance_id: i.server for i in (*pre_meta, *dec_meta)
         }
+        # Columnar scheduler-visible state plane, maintained incrementally by
+        # each DecodeSim (write-through), never rebuilt per request.
+        self.view = ClusterView(
+            tier_fn=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
+            capacity=max(len(dec_meta), 1),
+        )
+        self.decode = [
+            DecodeSim(m.instance_id, m.server, cfg.iter_model, cfg.beta_max,
+                      kv_budget, cfg.kv_spec, self.loop, view=self.view)
+            for m in dec_meta
+        ]
+        self._decode_map = {d.instance_id: d for d in self.decode}
         self.oracle = NetworkCostOracle(
             tier_of=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
             tier_bandwidth=self.tree.tier_bandwidth,
@@ -185,29 +193,22 @@ class Simulation:
         self._schedule_one(rs, now)
 
     # ------------------------------------------------------------- scheduling
-    def _candidates(self, req: Request) -> list[CandidateState]:
-        return [
-            CandidateState(
-                instance_id=d.instance_id,
-                free_memory=d.free_memory,
-                queued=d.queued,
-                batch_size=d.beta,
-                hit_tokens=float(d.hit_tokens(req)),
-                healthy=d.healthy,
-                iter_scale=d.iter_scale_est,
-            )
-            for d in self.decode
-        ]
+    def _fill_hits(self, req: Request) -> None:
+        """Refresh the per-request hit_tokens scratch column in-place."""
+        hits = self.view.hit_tokens
+        for d in self.decode:
+            hits[d.slot] = float(d.hit_tokens(req))
 
     def _schedule_one(self, rs: RequestState, now: float) -> None:
         req = rs.req
         info = RequestInfo(req.request_id, req.input_len, rs.kv_bytes)
-        cands = self._candidates(req)
+        self._fill_hits(req)
         view = self.oracle.view(now)
         if isinstance(self.sched, NetKVMultiHop):
             self.sched.observe_request(req.block_hashes)
         t0 = _time.perf_counter()
-        decision = self.sched.select(info, rs.prefill_instance, cands, view, self.inflight)
+        decision = self.sched.select(info, rs.prefill_instance, self.view, view,
+                                     self.inflight)
         self.decision_latencies.append(_time.perf_counter() - t0)
         if decision is None:
             rs.rejected = True
@@ -224,10 +225,14 @@ class Simulation:
             (RequestInfo(rs.req.request_id, rs.req.input_len, rs.kv_bytes), pid)
             for rs, pid in window
         ]
-        per_req_cands = [self._candidates(rs.req) for rs, _ in window]
+        hit_matrix = np.empty((len(window), self.view.n))
+        for i, (rs, _) in enumerate(window):
+            self._fill_hits(rs.req)
+            hit_matrix[i] = self.view.column("hit_tokens")
         view = self.oracle.view(now)
         t0 = _time.perf_counter()
-        decisions = self.sched.select_batch(reqs, per_req_cands, view, self.inflight)
+        decisions = self.sched.select_batch(reqs, (self.view, hit_matrix), view,
+                                            self.inflight)
         self.decision_latencies.append((_time.perf_counter() - t0) / len(window))
         for (rs, pid), dec in zip(window, decisions):
             if dec is None:
@@ -303,16 +308,16 @@ class Simulation:
             self.sched.on_transfer_complete(rs.req.block_hashes, 1000 + pod)
         dec = self._decode_by_id(rs.decode_instance)
         if not dec.healthy:
+            # Dispatched inside the detection window: the landed transfer
+            # bounces — release the pin taken at reserve() and requeue.
+            dec.release(rs)
             self._requeue(rs, now)
             return
         dec.admit_after_transfer(rs, now)
         self._reschedule_net(now)
 
     def _decode_by_id(self, iid: int) -> DecodeSim:
-        for d in self.decode:
-            if d.instance_id == iid:
-                return d
-        raise KeyError(iid)
+        return self._decode_map[iid]  # O(1): mirrors ClusterView.slot_of
 
     def _reschedule_net(self, now: float) -> None:
         nct = self.net.next_completion_time(now)
@@ -345,7 +350,7 @@ class Simulation:
                 victims.append(rs)
             # Health flips scheduler-visible after the detection delay; until
             # then new dispatches to this instance bounce and requeue.
-            self.loop.after(f.detection_delay, lambda t, d=dec: None)
+            self.loop.after(f.detection_delay, lambda t, d=dec: d.mark_detected(t))
             for rs in victims:
                 self._requeue(rs, now)
             self._reschedule_net(now)
@@ -355,11 +360,12 @@ class Simulation:
             new_id = max(self._server_of) + 1
             # Elastic join: place on the least-populated server.
             srv = self.decode[f.instance_id % len(self.decode)].server
+            self._server_of[new_id] = srv
             d = DecodeSim(new_id, srv, self.cfg.iter_model, self.cfg.beta_max,
                           self.cfg.hbm_free_per_gpu * self.cfg.tp,
-                          self.cfg.kv_spec, self.loop)
+                          self.cfg.kv_spec, self.loop, view=self.view)
             self.decode.append(d)
-            self._server_of[new_id] = srv
+            self._decode_map[new_id] = d
         else:
             raise ValueError(f.kind)
 

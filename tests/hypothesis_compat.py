@@ -1,0 +1,35 @@
+"""Hypothesis import guard for minimal environments.
+
+The tier-1 CI image may lack ``hypothesis``; the property tests must *skip*
+there rather than break collection of their whole module (the seed's
+top-level ``from hypothesis import ...`` errored out four test files, taking
+every plain unit test in them down too).  A module-level
+``pytest.importorskip("hypothesis")`` would likewise skip the unit tests, so
+guarded modules instead do
+
+    from hypothesis_compat import given, settings, st
+
+which resolves to the real hypothesis when installed (the ``dev`` extra in
+pyproject.toml) and to skip-marking stand-ins otherwise.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:  # minimal env: property tests skip, unit tests still run
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Stand-in for hypothesis.strategies: every call yields a dummy."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

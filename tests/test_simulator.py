@@ -7,6 +7,7 @@ import pytest
 from repro.sim import FaultEvent, SimConfig, Simulation, run_sim
 from repro.sim.kvcache import BlockCache
 from repro.traces import generate_trace, profile_capacity
+from repro.traces.mooncake import Request
 
 
 def _trace(profile="rag", dur=12.0, frac=1.0, seed=0, **kw):
@@ -101,6 +102,46 @@ class TestFaultTolerance:
             p.healthy = False
         m = sim.run(TRACE)
         assert m.n_rejected == len(TRACE)
+
+
+class TestDetectionDelay:
+    """Health flips scheduler-visible only after the detection delay; in the
+    window, dispatches to the dead instance bounce and requeue."""
+
+    def test_visibility_lags_by_detection_delay(self):
+        faults = [FaultEvent(time=0.5, kind="kill_decode", instance_id=5,
+                             detection_delay=0.25)]
+        sim = Simulation(_cfg("netkv-full", faults=faults))
+        sim.load_trace([])
+        dec = sim._decode_by_id(5)
+        sim.loop.run(until=0.6)
+        assert dec.healthy is False                       # engine truth: dead
+        assert bool(sim.view.healthy[dec.slot]) is True   # not yet detected
+        sim.loop.run(until=0.8)
+        assert bool(sim.view.healthy[dec.slot]) is False  # visible after delay
+
+    def test_window_dispatch_bounces_and_requeues(self):
+        """Single-decode cluster: a request scheduled inside the detection
+        window is dispatched to the dead instance, bounces at transfer-landing
+        time, and requeues — it is NOT rejected up front."""
+        cfg = SimConfig(scheduler="netkv-full", n_pods=1, racks_per_pod=1,
+                        servers_per_rack=1, gpus_per_server=8, tp=4,
+                        n_prefill=1, warmup=0.0, measure=5.0, background=0.0,
+                        faults=[FaultEvent(time=0.5, kind="kill_decode",
+                                           instance_id=-1,
+                                           detection_delay=1.0)])
+        sim = Simulation(cfg)
+        assert len(sim.decode) == 1
+        cfg.faults[0].instance_id = sim.decode[0].instance_id
+        # Short prompt: prefill lands well inside the (0.5, 1.5) window.
+        req = Request(request_id=0, arrival=0.55, input_len=128, output_len=4,
+                      block_hashes=tuple(("t", i) for i in range(8)),
+                      share_group=-1, slo=2.0)
+        sim.load_trace([req])
+        sim.loop.run(until=5.0)
+        rs = sim.records[0]
+        assert rs.requeues > 0      # dispatched to the dead instance, bounced
+        assert rs.rejected          # only decode instance never recovers
 
 
 class TestDeterminism:
