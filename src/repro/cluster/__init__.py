@@ -1,9 +1,16 @@
-"""Cluster substrate: fat-tree topology + flow-level network model."""
+"""Cluster substrate: fat-tree topology + columnar flow-level network model.
 
-from .topology import FatTree, Instance, Link, make_instances
-from .network import BackgroundTraffic, Flow, FlowNetwork, Transfer
+``FlowPlane`` is the production struct-of-arrays engine; ``FlowNetwork`` is
+its backwards-compatible alias.  ``ReferenceFlowNetwork`` (cluster/reference)
+is the retired per-object implementation kept as the bit-exact parity oracle.
+"""
+
+from .topology import FatTree, Instance, Link, MAX_PATH_LEN, make_instances
+from .network import BackgroundTraffic, FlowNetwork, FlowPlane, FlowView, Transfer
+from .reference import Flow, ReferenceFlowNetwork
 
 __all__ = [
-    "FatTree", "Instance", "Link", "make_instances",
-    "BackgroundTraffic", "Flow", "FlowNetwork", "Transfer",
+    "FatTree", "Instance", "Link", "MAX_PATH_LEN", "make_instances",
+    "BackgroundTraffic", "Flow", "FlowNetwork", "FlowPlane", "FlowView",
+    "ReferenceFlowNetwork", "Transfer",
 ]

@@ -1,13 +1,37 @@
-"""Flow-level network model: per-link max-min fair sharing + ECMP (§VI-B).
+"""FlowPlane: columnar flow-level network model (max-min fair sharing + ECMP).
 
 Each KV transfer is realised as ``n_flows`` parallel flows (one per TP shard)
-sharing the source NIC, each ECMP-hashed independently onto uplinks.  On
-every flow arrival/completion all coexisting flows on shared links are
-re-evaluated (progressive water-filling), the model RDMA congestion control
-(DCQCN) converges to.  Background traffic is a steady-state per-link
-utilisation fraction that scales down residual capacity — the mean-field
-approximation of §VI-B — optionally time-varying for the staleness and
-congestion-dynamics experiments.
+sharing the source NIC and one ECMP uplink choice.  On every flow
+arrival/completion the coexisting flows on shared links are re-evaluated
+(progressive water-filling), the model RDMA congestion control (DCQCN)
+converges to.  Background traffic is a steady-state per-link utilisation
+fraction that scales down residual capacity — the mean-field approximation
+of §VI-B — optionally time-varying for the staleness experiments.
+
+The engine mirrors the ``ClusterView`` pattern (§ PR 1): flows live in
+struct-of-arrays NumPy columns (``bytes_remaining``, ``rate``, ``tier``,
+``transfer``, fixed-width ``path`` rows built from ``FatTree.path_row``),
+so water-filling is a vectorised bincount/argmin fixed-point, ``advance``
+drains every flow in fused array ops, ``next_completion_time`` is one
+argmin, and abort/completion are O(flows-of-transfer) via a transfer->slot
+map.  Two scale levers beyond vectorisation:
+
+* **Incremental recomputation** — an arriving/departing flow only dirties
+  the connected component of flows it shares links with (transitively);
+  rates outside that component are provably unchanged by max-min
+  decomposition, so they are not recomputed.
+* **Piecewise-constant background sampling** — residual link capacities are
+  sampled from ``BackgroundTraffic`` at construction and at every
+  ``refresh_rates`` tick (0.1 s of sim time) instead of at every event, so
+  incremental recomputes stay exact between ticks.  With static background
+  this is identical to per-event sampling.
+
+The retired per-object implementation lives in ``cluster/reference.py``
+(``ReferenceFlowNetwork``) as the parity oracle: rates, transfer completion
+order, finish times and per-tier byte counters must match it bit-for-bit
+(``tests/test_flowplane_parity.py``) — which is why the byte accumulators
+below use ordered ``np.add.at`` reductions (sequential, reference-order
+float addition) rather than pairwise ``sum``.
 """
 
 from __future__ import annotations
@@ -18,7 +42,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .topology import FatTree
+from .topology import FatTree, MAX_PATH_LEN
 
 
 class BackgroundTraffic:
@@ -54,15 +78,6 @@ class BackgroundTraffic:
 
 
 @dataclasses.dataclass
-class Flow:
-    flow_id: int
-    transfer: "Transfer"
-    path: tuple[int, ...]
-    bytes_remaining: float
-    rate: float = 0.0
-
-
-@dataclasses.dataclass
 class Transfer:
     transfer_id: int
     src: tuple[int, int, int]
@@ -77,20 +92,90 @@ class Transfer:
     finish_time: float | None = None
 
 
-class FlowNetwork:
-    """Fluid flow simulator over the fat-tree's directed links."""
+@dataclasses.dataclass
+class FlowView:
+    """Read-only per-flow view materialised from the columns (debug/tests)."""
 
-    def __init__(self, tree: FatTree, background: BackgroundTraffic, seed: int = 0):
+    flow_id: int
+    transfer: Transfer
+    path: tuple[int, ...]
+    bytes_remaining: float
+    rate: float
+
+
+class FlowPlane:
+    """Columnar fluid flow simulator over the fat-tree's directed links."""
+
+    def __init__(self, tree: FatTree, background: BackgroundTraffic, seed: int = 0,
+                 capacity: int = 64):
         self.tree = tree
         self.bg = background
         self.rng = np.random.default_rng(seed)
-        self.flows: dict[int, Flow] = {}
         self._next_flow = 0
         self._next_transfer = 0
         self._last_advance = 0.0
         self.completed_transfers = 0
         self.bytes_delivered = 0.0
-        self._tier_bytes = {0: 0.0, 1: 0.0, 2: 0.0, 3: 0.0}
+        self._tier_bytes = np.zeros(4, np.float64)
+        # ---- flow columns (slot-indexed; slots recycled via a free list) --
+        cap = max(int(capacity), 1)
+        self.f_id = np.full(cap, -1, np.int64)
+        self.f_bytes = np.zeros(cap, np.float64)          # bytes_remaining
+        self.f_rate = np.zeros(cap, np.float64)
+        self.f_tier = np.zeros(cap, np.int64)
+        self.f_transfer = np.full(cap, -1, np.int64)      # transfer id
+        # Path rows are padded with the virtual link id ``n_links`` (capacity
+        # +inf, never a bottleneck), so every array op can ignore ragged
+        # path lengths without masking.  int16 link ids (topologies under
+        # ~32k links, i.e. any fat tree this repo builds) keep the stable
+        # argsort in the water-filling CSR build on NumPy's radix path.
+        self._pad = tree.n_links
+        self._path_dtype = np.int16 if tree.n_links < 2**15 - 1 else np.int32
+        self.f_path = np.full((cap, MAX_PATH_LEN), self._pad, self._path_dtype)
+        self._free: list[int] = list(range(cap - 1, -1, -1))
+        # Creation-order registry of live slots (dict => preserves insertion
+        # order under deletion, mirroring the reference's flow dict).
+        self._slot_order: dict[int, None] = {}
+        self._transfers: dict[int, Transfer] = {}         # open transfers
+        self._tslots: dict[int, list[int]] = {}           # transfer -> slots
+        # ---- residual capacity plane (piecewise-constant bg sampling) ----
+        self._resid_caps = np.empty(tree.n_links + 1, np.float64)
+        self._sample_background(0.0)
+
+    # ------------------------------------------------------------- internals
+    def _sample_background(self, now: float) -> None:
+        """(Re)sample bg utilisation into the residual-capacity vector."""
+        u = np.array([self.bg.util(t, now) for t in range(4)], np.float64)
+        self._resid_caps[:-1] = self.tree.link_capacity * (1.0 - u[self.tree.link_tier])
+        self._resid_caps[-1] = np.inf
+
+    def _ordered_slots(self) -> np.ndarray:
+        return np.fromiter(self._slot_order, np.intp, len(self._slot_order))
+
+    def _grow(self) -> None:
+        cap = len(self.f_id)
+        new_cap = cap * 2
+        for name in ("f_id", "f_bytes", "f_rate", "f_tier", "f_transfer"):
+            old = getattr(self, name)
+            new = np.zeros(new_cap, old.dtype)
+            new[:cap] = old
+            setattr(self, name, new)
+        path = np.full((new_cap, MAX_PATH_LEN), self._pad, self._path_dtype)
+        path[:cap] = self.f_path
+        self.f_path = path
+        self._free.extend(range(new_cap - 1, cap - 1, -1))
+
+    def _alloc_slot(self) -> int:
+        if not self._free:
+            self._grow()
+        return self._free.pop()
+
+    def _remove_slot(self, s: int) -> None:
+        del self._slot_order[s]
+        self.f_id[s] = -1
+        self.f_rate[s] = 0.0
+        self.f_path[s] = self._pad
+        self._free.append(s)
 
     # ------------------------------------------------------------------ API
     def start_transfer(
@@ -118,110 +203,183 @@ class FlowNetwork:
         per_flow = total_bytes / n_flows
         # One ECMP hash per transfer: TP shard flows share the host pair and
         # take the same uplinks, so the per-transfer uncontested ceiling is
-        # exactly B_tau while distinct transfers can still collide.
-        path = tuple(self.tree.flow_path(src, dst, self.rng))
+        # exactly B_tau while distinct transfers can still collide.  Same
+        # RNG draw sequence as the reference's flow_path.
+        row, plen = self.tree.path_row(src, dst, self.rng)
+        row = np.where(row < 0, self._pad, row).astype(self._path_dtype)
+        slots = []
         for _ in range(n_flows):
-            f = Flow(self._next_flow, t, path, per_flow)
+            s = self._alloc_slot()
+            self.f_id[s] = self._next_flow
             self._next_flow += 1
-            self.flows[f.flow_id] = f
+            self.f_bytes[s] = per_flow
+            self.f_rate[s] = 0.0
+            self.f_tier[s] = tier
+            self.f_transfer[s] = t.transfer_id
+            self.f_path[s] = row
+            self._slot_order[s] = None
+            slots.append(s)
             t.flows_open += 1
-        self._recompute_rates(now)
+        self._transfers[t.transfer_id] = t
+        self._tslots[t.transfer_id] = slots
+        self._recompute_rates(dirty_links=row[:plen])
         return t
 
     def abort_transfer(self, transfer: Transfer, now: float) -> None:
         self.advance(now)
-        dead = [fid for fid, f in self.flows.items() if f.transfer is transfer]
-        for fid in dead:
-            del self.flows[fid]
+        dead = [s for s in self._tslots.pop(transfer.transfer_id, ())
+                if s in self._slot_order]
+        touched = self.f_path[dead, :].ravel() if dead else None
+        for s in dead:
+            self._remove_slot(s)
+        self._transfers.pop(transfer.transfer_id, None)
         transfer.aborted = True
         transfer.done = True
         if dead:
-            self._recompute_rates(now)
+            self._recompute_rates(dirty_links=touched)
 
     def advance(self, now: float) -> None:
         """Drain bytes at current rates from the last advance point to now."""
         dt = now - self._last_advance
         if dt < 0:
             raise ValueError(f"time went backwards: {self._last_advance} -> {now}")
-        if dt == 0.0 or not self.flows:
+        if dt == 0.0 or not self._slot_order:
             self._last_advance = now
             return
-        finished: list[Flow] = []
-        for f in self.flows.values():
-            moved = min(f.bytes_remaining, f.rate * dt)
-            f.bytes_remaining -= moved
-            self.bytes_delivered += moved
-            self._tier_bytes[f.transfer.tier] += moved
-            # 1-byte completion threshold: float residue from rate*dt would
-            # otherwise strand sub-byte remainders and storm the event loop.
-            if f.bytes_remaining <= 1.0:
-                finished.append(f)
+        slots = self._ordered_slots()
+        rem = self.f_bytes[slots]
+        moved = np.minimum(rem, self.f_rate[slots] * dt)
+        self.f_bytes[slots] = rem - moved
+        # Ordered (sequential) accumulation: np.add.at applies the additions
+        # in index order, reproducing the reference's per-flow running sums
+        # bit-for-bit where a pairwise .sum() would not.
+        acc = np.array([self.bytes_delivered])
+        np.add.at(acc, np.zeros(len(slots), np.intp), moved)
+        self.bytes_delivered = float(acc[0])
+        np.add.at(self._tier_bytes, self.f_tier[slots], moved)
         self._last_advance = now
-        if finished:
-            done_transfers: list[Transfer] = []
-            for f in finished:
-                del self.flows[f.flow_id]
-                f.transfer.flows_open -= 1
-                if f.transfer.flows_open == 0 and not f.transfer.aborted:
-                    f.transfer.done = True
-                    f.transfer.finish_time = now
-                    done_transfers.append(f.transfer)
-            self._recompute_rates(now)
-            for t in done_transfers:
-                self.completed_transfers += 1
-                t.on_complete(t, now)
+        # 1-byte completion threshold: float residue from rate*dt would
+        # otherwise strand sub-byte remainders and storm the event loop.
+        finished = slots[self.f_bytes[slots] <= 1.0]
+        if len(finished) == 0:
+            return
+        touched = self.f_path[finished, :].ravel()
+        done_transfers: list[Transfer] = []
+        for s in finished:           # creation order, matching the reference
+            tid = int(self.f_transfer[s])
+            self._remove_slot(s)
+            t = self._transfers[tid]
+            t.flows_open -= 1
+            self._tslots[tid].remove(s)
+            if t.flows_open == 0:
+                del self._transfers[tid]
+                del self._tslots[tid]
+                if not t.aborted:
+                    t.done = True
+                    t.finish_time = now
+                    done_transfers.append(t)
+        self._recompute_rates(dirty_links=touched)
+        for t in done_transfers:
+            self.completed_transfers += 1
+            t.on_complete(t, now)
 
     def next_completion_time(self, now: float) -> Optional[float]:
         """Earliest moment any flow drains at current rates (None if idle)."""
-        best = None
-        for f in self.flows.values():
-            if f.rate <= 0:
-                continue
-            eta = now + f.bytes_remaining / f.rate + 1e-9
-            if best is None or eta < best:
-                best = eta
-        return best
+        if not self._slot_order:
+            return None
+        slots = self._ordered_slots()
+        rates = self.f_rate[slots]
+        live = rates > 0
+        if not live.any():
+            return None
+        etas = self.f_bytes[slots][live] / rates[live]
+        return float(now + etas.min() + 1e-9)
 
     def refresh_rates(self, now: float) -> None:
-        """Periodic tick so time-varying background traffic takes effect."""
+        """Periodic tick: resample background, full water-filling pass."""
         self.advance(now)
-        if self.flows:
-            self._recompute_rates(now)
+        self._sample_background(now)
+        if self._slot_order:
+            self._recompute_rates(dirty_links=None)
 
     # -------------------------------------------------------- water-filling
-    def _recompute_rates(self, now: float) -> None:
-        if not self.flows:
+    def _recompute_rates(self, dirty_links: np.ndarray | None = None) -> None:
+        """Vectorised progressive water-filling (max-min fair sharing).
+
+        ``dirty_links=None`` recomputes every flow.  Otherwise only the
+        connected component of flows reachable from ``dirty_links`` through
+        shared links is recomputed: max-min allocations decompose exactly
+        over link-disjoint components, so untouched flows keep their rates
+        (bit-for-bit what a full recompute would assign them).
+        """
+        if not self._slot_order:
             return
-        flows_on_link: dict[int, list[int]] = {}
-        for fid, f in self.flows.items():
-            for lid in f.path:
-                flows_on_link.setdefault(lid, []).append(fid)
-        caps = {
-            lid: self.tree.links[lid].capacity
-            * (1.0 - self.bg.util(self.tree.links[lid].tier, now))
-            for lid in flows_on_link
-        }
-        unfixed = set(self.flows.keys())
-        while unfixed:
-            bottleneck = None
-            for lid, fl in flows_on_link.items():
-                active = [fid for fid in fl if fid in unfixed]
-                if not active:
-                    continue
-                share = caps[lid] / len(active)
-                if bottleneck is None or share < bottleneck[0]:
-                    bottleneck = (share, lid, active)
-            if bottleneck is None:  # pragma: no cover - every flow has links
-                for fid in unfixed:
-                    self.flows[fid].rate = float("inf")
+        slots = self._ordered_slots()
+        P = self.f_path[slots]                       # (k, MAX_PATH_LEN)
+        pad = self._pad
+        if dirty_links is not None:
+            link_dirty = np.zeros(pad + 1, bool)
+            link_dirty[dirty_links] = True
+            link_dirty[pad] = False
+            flow_dirty = np.zeros(len(slots), bool)
+            while True:
+                hit = link_dirty[P].any(axis=1) & ~flow_dirty
+                if not hit.any():
+                    break
+                flow_dirty |= hit
+                link_dirty[self.f_path[slots[hit]].ravel()] = True
+                link_dirty[pad] = False
+            if not flow_dirty.any():
+                return
+            slots = slots[flow_dirty]
+            P = P[flow_dirty]
+        k = len(slots)
+        flat = P.ravel()                             # row-major: flow x hop
+        # First-encounter order per link (flow-creation x hop order) — the
+        # tie-break the reference's insertion-ordered dict scan applies.
+        # The whole fixed point runs in *encounter-permuted* link space so
+        # the per-round bottleneck pick is a single argmin (first minimum in
+        # scan order == first-encountered link with the minimal share).
+        enc = np.full(pad + 1, flat.size + 1, np.int64)
+        np.minimum.at(enc, flat, np.arange(flat.size))
+        perm = np.argsort(enc, kind="stable")        # unseen links sort last
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(pad + 1)
+        P = inv[P].astype(self._path_dtype)          # permuted path matrix
+        flat = P.ravel()
+        counts = np.bincount(flat, minlength=pad + 1)
+        ppad = int(inv[pad])
+        counts[ppad] = 0
+        # CSR link -> flow-row index, built once per recompute.  The stable
+        # sort keeps rows in flow-creation order within each link, which is
+        # both the reference's per-link flow order (for the residual
+        # subtraction sequence) and what makes each round O(flows-on-link).
+        csr_order = np.argsort(flat, kind="stable")
+        csr_rows = csr_order // MAX_PATH_LEN
+        csr_start = np.searchsorted(flat[csr_order], np.arange(pad + 2))
+        caps = self._resid_caps[perm]
+        shares = np.empty(pad + 1, np.float64)
+        unfixed = np.ones(k, bool)
+        rates = np.zeros(k, np.float64)
+        n_unfixed = k
+        while n_unfixed:
+            shares.fill(np.inf)
+            np.divide(caps, counts, out=shares, where=counts > 0)
+            lid = int(np.argmin(shares))             # enc-order tie-break
+            share = shares[lid]
+            if share == np.inf:  # pragma: no cover - every flow has links
+                rates[unfixed] = np.inf
                 break
-            share, lid, active = bottleneck
-            for fid in active:
-                self.flows[fid].rate = share
-                unfixed.discard(fid)
-                for l2 in self.flows[fid].path:
-                    caps[l2] = max(0.0, caps.get(l2, 0.0) - share)
-            flows_on_link.pop(lid, None)
+            rows = csr_rows[csr_start[lid]:csr_start[lid + 1]]
+            fixed_rows = rows[unfixed[rows]]         # flow-creation order
+            rates[fixed_rows] = share
+            idx = P[fixed_rows].ravel()              # reference subtraction order
+            np.subtract.at(caps, idx, share)
+            np.maximum(caps, 0.0, out=caps)
+            np.subtract.at(counts, idx, 1)           # padded hops go negative:
+            n_unfixed -= len(fixed_rows)             # counts<=0 is never active
+            unfixed[fixed_rows] = False
+        self.f_rate[slots] = rates
 
     # ------------------------------------------------------------ telemetry
     def tier_congestion(self, now: float) -> dict[int, float]:
@@ -234,6 +392,42 @@ class FlowNetwork:
         """
         return self.bg.tier_map(now)
 
-    def tier_utilization_observed(self, now: float, window_bytes: bool = False):
+    def tier_utilization_observed(self, now: float) -> dict[int, float]:
         """Diagnostic: cumulative KV bytes moved per tier (for Table VI)."""
-        return dict(self._tier_bytes)
+        return {t: float(self._tier_bytes[t]) for t in range(4)}
+
+    def link_utilization(self) -> tuple[np.ndarray, np.ndarray]:
+        """(per-link aggregate flow rate, residual capacity) diagnostics.
+
+        Real (non-padding) links only; used by the max-min invariant tests.
+        """
+        load = np.zeros(self._pad + 1, np.float64)
+        for s in self._slot_order:
+            load[self.f_path[s]] += self.f_rate[s]
+        load[self._pad] = 0.0
+        return load[:-1], self._resid_caps[:-1].copy()
+
+    # ---------------------------------------------------------------- debug
+    @property
+    def flows(self) -> dict[int, FlowView]:
+        """Per-flow object view materialised on demand (tests/debug only)."""
+        out = {}
+        for s in self._slot_order:
+            path = tuple(int(l) for l in self.f_path[s] if l != self._pad)
+            out[int(self.f_id[s])] = FlowView(
+                flow_id=int(self.f_id[s]),
+                transfer=self._transfers[int(self.f_transfer[s])],
+                path=path,
+                bytes_remaining=float(self.f_bytes[s]),
+                rate=float(self.f_rate[s]),
+            )
+        return out
+
+    @property
+    def n_flows_active(self) -> int:
+        return len(self._slot_order)
+
+
+# The production engine; the per-object original is
+# ``cluster.reference.ReferenceFlowNetwork``.
+FlowNetwork = FlowPlane

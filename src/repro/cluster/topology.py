@@ -18,7 +18,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
+import numpy as np
+
 from repro.core.oracle import PAPER_TIER_BANDWIDTH, PAPER_TIER_LATENCY
+
+# Longest possible path: nic_up, tor_up, agg_up, agg_down, tor_down, nic_down.
+MAX_PATH_LEN = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +109,35 @@ class FatTree:
             self._agg_up[p] = [add("agg_up", 3) for _ in range(n_agg_uplinks)]
             self._agg_down[p] = [add("agg_down", 3) for _ in range(n_agg_uplinks)]
 
+        # --- columnar link/path plane (FlowPlane substrate) ----------------
+        # Flat arrays mirroring the dicts above so the flow simulator can
+        # build per-flow path rows and residual-capacity vectors without
+        # touching Python objects.  Server index: (pod * racks + rack) *
+        # servers_per_rack + server.
+        self.n_links = len(self.links)
+        self.link_capacity = np.array([l.capacity for l in self.links], np.float64)
+        self.link_tier = np.array([l.tier for l in self.links], np.int64)
+        self.n_servers = n_pods * racks_per_pod * servers_per_rack
+        n_racks = n_pods * racks_per_pod
+        self._srv_nvlink = np.zeros(self.n_servers, np.int32)
+        self._srv_nic_up = np.zeros(self.n_servers, np.int32)
+        self._srv_nic_down = np.zeros(self.n_servers, np.int32)
+        self._rack_tor_up = np.zeros((n_racks, n_tor_uplinks), np.int32)
+        self._rack_tor_down = np.zeros((n_racks, n_tor_uplinks), np.int32)
+        self._pod_agg_up = np.zeros((n_pods, n_agg_uplinks), np.int32)
+        self._pod_agg_down = np.zeros((n_pods, n_agg_uplinks), np.int32)
+        for (p, r, s), lid in self._nvlink.items():
+            si = self.server_index((p, r, s))
+            self._srv_nvlink[si] = lid
+            self._srv_nic_up[si] = self._nic_up[(p, r, s)]
+            self._srv_nic_down[si] = self._nic_down[(p, r, s)]
+        for (p, r), lids in self._tor_up.items():
+            self._rack_tor_up[p * racks_per_pod + r] = lids
+            self._rack_tor_down[p * racks_per_pod + r] = self._tor_down[(p, r)]
+        for p, lids in self._agg_up.items():
+            self._pod_agg_up[p] = lids
+            self._pod_agg_down[p] = self._agg_down[p]
+
     # -- coordinates --------------------------------------------------------
     def _coord_of(self, gpu: int) -> GpuCoord:
         per_server = self.gpus_per_server
@@ -123,6 +157,11 @@ class FatTree:
         c = self._coords[gpu]
         return (c.pod, c.rack, c.server)
 
+    def server_index(self, srv: tuple[int, int, int]) -> int:
+        """Flat index of a (pod, rack, server) triple into the link tables."""
+        p, r, s = srv
+        return (p * self.racks_per_pod + r) * self.servers_per_rack + s
+
     # -- tiers ---------------------------------------------------------------
     def tier(self, a: GpuCoord | tuple[int, int, int], b: GpuCoord | tuple[int, int, int]) -> int:
         """tau(p, d) for two servers (or GPU coords)."""
@@ -136,7 +175,52 @@ class FatTree:
             return 2
         return 3
 
+    def tier_vec(self, src_idx: np.ndarray, dst_idx: np.ndarray) -> np.ndarray:
+        """Vectorised tau over flat server indices (broadcasting)."""
+        spr, rpp = self.servers_per_rack, self.racks_per_pod
+        src_rack, dst_rack = src_idx // spr, dst_idx // spr
+        src_pod, dst_pod = src_rack // rpp, dst_rack // rpp
+        t = np.full(np.broadcast(src_idx, dst_idx).shape, 3, np.int64)
+        t[src_pod == dst_pod] = 2
+        t[src_rack == dst_rack] = 1
+        t[src_idx == dst_idx] = 0
+        return t
+
     # -- paths (ECMP) ---------------------------------------------------------
+    def path_row(
+        self, src: tuple[int, int, int], dst: tuple[int, int, int], rng,
+        out: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, int]:
+        """Fixed-width link-id row (padded with -1) + path length.
+
+        Same ECMP model and — critically — the *same RNG draw sequence* as
+        ``flow_path``, so the columnar FlowPlane and the per-object reference
+        pick identical uplinks under a shared seed.
+        """
+        if out is None:
+            out = np.full(MAX_PATH_LEN, -1, np.int32)
+        t = self.tier(src, dst)
+        si, di = self.server_index(src), self.server_index(dst)
+        if t == 0:
+            out[0] = self._srv_nvlink[si]
+            return out, 1
+        out[0] = self._srv_nic_up[si]
+        k = 1
+        if t >= 2:
+            out[k] = self._rack_tor_up[si // self.servers_per_rack][
+                rng.integers(self.n_tor_uplinks)]
+            k += 1
+        if t == 3:
+            out[k] = self._pod_agg_up[src[0]][rng.integers(self.n_agg_uplinks)]
+            out[k + 1] = self._pod_agg_down[dst[0]][rng.integers(self.n_agg_uplinks)]
+            k += 2
+        if t >= 2:
+            out[k] = self._rack_tor_down[di // self.servers_per_rack][
+                rng.integers(self.n_tor_uplinks)]
+            k += 1
+        out[k] = self._srv_nic_down[di]
+        return out, k + 1
+
     def flow_path(
         self, src: tuple[int, int, int], dst: tuple[int, int, int], rng
     ) -> list[int]:
@@ -146,19 +230,8 @@ class FatTree:
         (tor_up/agg_up on the source side, agg_down/tor_down on the
         destination side), per §VI-B.
         """
-        t = self.tier(src, dst)
-        if t == 0:
-            return [self._nvlink[src]]
-        path = [self._nic_up[src]]
-        if t >= 2:
-            path.append(self._tor_up[src[:2]][rng.integers(self.n_tor_uplinks)])
-        if t == 3:
-            path.append(self._agg_up[src[0]][rng.integers(self.n_agg_uplinks)])
-            path.append(self._agg_down[dst[0]][rng.integers(self.n_agg_uplinks)])
-        if t >= 2:
-            path.append(self._tor_down[dst[:2]][rng.integers(self.n_tor_uplinks)])
-        path.append(self._nic_down[dst])
-        return path
+        row, k = self.path_row(src, dst, rng)
+        return [int(l) for l in row[:k]]
 
     def base_latency(self, src, dst) -> float:
         return self.tier_latency[self.tier(src, dst)]

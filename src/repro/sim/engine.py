@@ -26,19 +26,23 @@ class EventLoop:
         self._seq = itertools.count()
         self.now = 0.0
         self.processed = 0
+        self._live = 0  # pending non-cancelled events (O(1) empty())
 
     def at(self, time: float, fn: Callable[[float], None]) -> Event:
         if time < self.now - 1e-12:
             time = self.now  # clamp: callbacks may round slightly backwards
         ev = Event(max(time, self.now), next(self._seq), fn)
         heapq.heappush(self._heap, ev)
+        self._live += 1
         return ev
 
     def after(self, delay: float, fn: Callable[[float], None]) -> Event:
         return self.at(self.now + max(delay, 0.0), fn)
 
     def cancel(self, ev: Event) -> None:
-        ev.cancelled = True
+        if not ev.cancelled:
+            ev.cancelled = True
+            self._live -= 1
 
     def run(self, until: float = float("inf"), max_events: int = 50_000_000) -> None:
         while self._heap and self.processed < max_events:
@@ -46,14 +50,24 @@ class EventLoop:
             if ev.cancelled:
                 continue
             if ev.time > until:
-                heapq.heappush(self._heap, ev)  # put back for a later resume
+                heapq.heappush(self._heap, ev)  # put back (still live) for resume
                 self.now = until
                 return
             self.now = ev.time
             self.processed += 1
+            self._live -= 1
+            # Mark consumed: a late cancel() on an already-fired event (a
+            # caller holding a stale reference) must be a no-op, not a second
+            # _live decrement that would make empty() lie.
+            ev.cancelled = True
             ev.fn(self.now)
         if self._heap and self.processed >= max_events:
             raise RuntimeError("event budget exhausted — runaway simulation?")
 
     def empty(self) -> bool:
-        return not any(not e.cancelled for e in self._heap)
+        """True when no live (non-cancelled) events are pending.
+
+        Counter-based: the previous implementation linearly scanned the whole
+        heap, and ``Simulation._net_tick`` calls this every 0.1 s of sim time.
+        """
+        return self._live == 0

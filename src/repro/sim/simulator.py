@@ -30,7 +30,7 @@ from repro.core.schedulers import RequestInfo, make_scheduler
 from repro.core.batch_assign import NetKVBatch
 from repro.core.multihop import NetKVMultiHop, StagingStore
 from repro.core.view import ClusterView
-from repro.cluster.network import BackgroundTraffic, FlowNetwork, Transfer
+from repro.cluster.network import BackgroundTraffic, FlowPlane, Transfer
 from repro.cluster.topology import FatTree, make_instances
 from repro.traces.mooncake import Request
 from .engine import EventLoop
@@ -97,7 +97,7 @@ class Simulation:
         self.bg = bg if isinstance(bg, BackgroundTraffic) else BackgroundTraffic(
             bg, wander=cfg.bg_wander, seed=cfg.seed
         )
-        self.net = FlowNetwork(self.tree, self.bg, seed=cfg.seed)
+        self.net = FlowPlane(self.tree, self.bg, seed=cfg.seed)
         pre_meta, dec_meta = make_instances(self.tree, tp=cfg.tp, n_prefill=cfg.n_prefill)
         kv_budget = cfg.hbm_free_per_gpu * cfg.tp
         self.prefill = [
@@ -358,8 +358,15 @@ class Simulation:
             self._decode_by_id(f.instance_id).iter_scale = f.factor
         elif f.kind == "add_decode":
             new_id = max(self._server_of) + 1
-            # Elastic join: place on the least-populated server.
-            srv = self.decode[f.instance_id % len(self.decode)].server
+            # Elastic join: place on the decode-hosting server with the
+            # fewest healthy resident decode instances (ties -> lowest
+            # server coordinate), so capacity lands where the pool is thin.
+            pop: dict[tuple[int, int, int], int] = {}
+            for d in self.decode:
+                pop.setdefault(d.server, 0)
+                if d.healthy:
+                    pop[d.server] += 1
+            srv = min(sorted(pop), key=pop.get)
             self._server_of[new_id] = srv
             d = DecodeSim(new_id, srv, self.cfg.iter_model, self.cfg.beta_max,
                           self.cfg.hbm_free_per_gpu * self.cfg.tp,
@@ -381,6 +388,16 @@ class Simulation:
         rs.decode_instance = -1
         rs.tokens_out = 0
         rs.transfer_end = -1.0
+        # Clear every per-attempt field from the failed attempt: a stale
+        # first_token/admit_time would report a phantom TTFT for a request
+        # that never decoded, and stale tier/s_eff/hit_tokens would skew the
+        # tier-fraction and hit-rate metrics toward the dead instance.
+        rs.sched_time = -1.0
+        rs.first_token = -1.0
+        rs.admit_time = -1.0
+        rs.tier = -1
+        rs.s_eff = 0.0
+        rs.hit_tokens = 0.0
         if rs.requeues > 3:
             rs.rejected = True
             self.rejected += 1

@@ -1,0 +1,75 @@
+"""EventLoop behaviour: O(1) live-event accounting for empty()."""
+
+from repro.sim.engine import EventLoop
+
+
+def _noop(now):
+    pass
+
+
+class TestEmptyCounter:
+    def test_empty_initially_and_after_run(self):
+        loop = EventLoop()
+        assert loop.empty()
+        loop.at(1.0, _noop)
+        loop.at(2.0, _noop)
+        assert not loop.empty()
+        loop.run()
+        assert loop.empty()
+
+    def test_cancel_decrements_once(self):
+        loop = EventLoop()
+        ev = loop.at(1.0, _noop)
+        loop.cancel(ev)
+        assert loop.empty()
+        loop.cancel(ev)          # double-cancel must not go negative
+        assert loop._live == 0
+        loop.at(1.0, _noop)
+        assert not loop.empty()  # a later event is still visible
+
+    def test_putback_event_stays_live(self):
+        """run(until=...) re-pushes the future event: still pending."""
+        loop = EventLoop()
+        loop.at(5.0, _noop)
+        loop.run(until=1.0)
+        assert not loop.empty()
+        loop.run(until=10.0)
+        assert loop.empty()
+
+    def test_counter_matches_heap_scan(self):
+        """The counter equals the old O(n) definition under churn."""
+        loop = EventLoop()
+        evs = [loop.at(float(i), _noop) for i in range(20)]
+        for ev in evs[::3]:
+            loop.cancel(ev)
+        scan = sum(1 for e in loop._heap if not e.cancelled)
+        assert loop._live == scan
+        loop.run(until=7.5)
+        scan = sum(1 for e in loop._heap if not e.cancelled)
+        assert loop._live == scan
+
+    def test_cancel_after_execution_is_noop(self):
+        """A stale reference cancelled after its event fired must not
+        corrupt the live counter (empty() would report true with work
+        still pending, silently stopping the simulator's net ticks)."""
+        loop = EventLoop()
+        ev = loop.at(1.0, _noop)
+        loop.run(until=2.0)
+        loop.at(5.0, _noop)       # one genuinely pending event
+        loop.cancel(ev)           # stale: ev already executed
+        assert loop._live == 1
+        assert not loop.empty()
+
+    def test_callbacks_scheduling_more_events(self):
+        loop = EventLoop()
+        fired = []
+
+        def chain(now):
+            fired.append(now)
+            if len(fired) < 3:
+                loop.after(1.0, chain)
+
+        loop.after(1.0, chain)
+        loop.run()
+        assert len(fired) == 3
+        assert loop.empty()

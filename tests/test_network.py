@@ -114,6 +114,53 @@ def test_work_conservation(data):
     assert abs(net.bytes_delivered - total) < max(1e-6 * total, 64.0)
 
 
+def _random_plane(seed, n_transfers, bg=0.0):
+    tree = FatTree()
+    net = FlowNetwork(tree, BackgroundTraffic(bg), seed=seed)
+    wl = np.random.default_rng(seed)
+    servers = [(p, r, s) for p in range(2) for r in range(2) for s in range(2)]
+    for _ in range(n_transfers):
+        i, j = wl.choice(8, 2, replace=False)
+        net.start_transfer(servers[i], servers[j], float(wl.uniform(1e6, 1e9)),
+                           0.0, lambda t, n: None)
+    return net
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_tier_bytes_sum_to_bytes_delivered(data):
+    """Property: per-tier byte counters partition the delivered total."""
+    net = _random_plane(data.draw(st.integers(0, 999)),
+                        data.draw(st.integers(1, 8)),
+                        bg=data.draw(st.floats(0.0, 0.5)))
+    # Partially drain (a few completion epochs), then check mid-flight too.
+    now = 0.0
+    for _ in range(data.draw(st.integers(0, 4))):
+        nxt = net.next_completion_time(now)
+        if nxt is None:
+            break
+        now = nxt
+        net.advance(now)
+    tier_sum = sum(net.tier_utilization_observed(now).values())
+    assert abs(tier_sum - net.bytes_delivered) <= max(1e-9 * net.bytes_delivered, 1.0)
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_max_min_invariants(data):
+    """Property: no link over residual capacity; every flow is bottlenecked
+    on at least one saturated link of its path (max-min optimality)."""
+    net = _random_plane(data.draw(st.integers(0, 999)),
+                        data.draw(st.integers(1, 10)),
+                        bg=data.draw(st.floats(0.0, 0.5)))
+    load, resid = net.link_utilization()
+    assert np.all(load <= resid * (1 + 1e-9) + 1e-6)
+    for f in net.flows.values():
+        assert f.rate > 0
+        saturated = any(load[l] >= resid[l] * (1 - 1e-9) - 1e-6 for l in f.path)
+        assert saturated, f"flow {f.flow_id} not bottlenecked on its path"
+
+
 class TestTopology:
     def test_tiers(self):
         t = FatTree()
@@ -121,6 +168,27 @@ class TestTopology:
         assert t.tier((0, 0, 0), (0, 0, 1)) == 1
         assert t.tier((0, 0, 0), (0, 1, 0)) == 2
         assert t.tier((0, 0, 0), (1, 1, 1)) == 3
+
+    def test_tier_vec_matches_scalar_tier(self):
+        """Vectorised tau over flat server indices == the scalar tier()."""
+        t = FatTree(n_pods=2, racks_per_pod=3, servers_per_rack=2)
+        servers = [(p, r, s) for p in range(2) for r in range(3) for s in range(2)]
+        idx = np.array([t.server_index(srv) for srv in servers])
+        assert list(idx) == list(range(t.n_servers))
+        mat = t.tier_vec(idx[:, None], idx[None, :])
+        for i, a in enumerate(servers):
+            for j, b in enumerate(servers):
+                assert mat[i, j] == t.tier(a, b), (a, b)
+
+    def test_path_row_matches_flow_path(self):
+        """path_row consumes the same RNG draws and yields the same links."""
+        t = FatTree()
+        r1 = np.random.default_rng(7)
+        r2 = np.random.default_rng(7)
+        for src, dst in [((0, 0, 0), (0, 0, 0)), ((0, 0, 0), (0, 0, 1)),
+                         ((0, 0, 0), (0, 1, 0)), ((0, 1, 1), (1, 0, 1))]:
+            row, k = t.path_row(src, dst, r1)
+            assert [int(x) for x in row[:k]] == t.flow_path(src, dst, r2)
 
     def test_pack_placement_never_colocates(self):
         """Table VI footnote: tier 0/1 unreached under pack placement."""

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.sim import FaultEvent, SimConfig, Simulation, run_sim
+from repro.sim.instances import RequestState
 from repro.sim.kvcache import BlockCache
 from repro.traces import generate_trace, profile_capacity
 from repro.traces.mooncake import Request
@@ -80,6 +81,34 @@ class TestFaultTolerance:
         m = run_sim(_cfg("netkv-full", faults=faults), TRACE)
         assert m.n_unfinished == 0
 
+    def test_elastic_join_lands_on_least_populated_server(self):
+        """add_decode places the new instance on the decode-hosting server
+        with the fewest healthy resident decode instances — after a kill,
+        that is the dead instance's server — and it becomes schedulable."""
+        faults = [
+            FaultEvent(time=1.0, kind="kill_decode", instance_id=5),
+            FaultEvent(time=3.0, kind="add_decode"),
+        ]
+        cfg = _cfg("netkv-full", faults=faults)
+        sim = Simulation(cfg)
+        dead_server = sim._decode_by_id(5).server
+        sim.run(TRACE)
+        new = sim.decode[-1]
+        assert new.instance_id == max(sim._server_of)
+        assert new.server == dead_server          # thinnest decode population
+        assert bool(sim.view.healthy[new.slot])   # scheduler-visible
+        assert new.iterations > 0                 # actually received work
+
+    def test_elastic_join_spreads_across_servers(self):
+        """With all servers equally populated, consecutive joins never stack
+        on the server a previous join already thickened."""
+        faults = [FaultEvent(time=2.0 + i, kind="add_decode") for i in range(2)]
+        cfg = _cfg("netkv-full", faults=faults)
+        sim = Simulation(cfg)
+        sim.run(TRACE)
+        joined = sim.decode[-2:]
+        assert joined[0].server != joined[1].server
+
     def test_straggler_detected_and_avoided(self):
         """A 4x-slowed instance should receive fewer requests under LA-aware
         policies once the EWMA detector converges."""
@@ -142,6 +171,49 @@ class TestDetectionDelay:
         rs = sim.records[0]
         assert rs.requeues > 0      # dispatched to the dead instance, bounced
         assert rs.rejected          # only decode instance never recovers
+
+
+class TestRequeueReset:
+    def test_requeue_clears_per_attempt_fields(self):
+        """Regression: a requeued request must not keep sched_time /
+        first_token / admit_time / tier / s_eff / hit_tokens from the failed
+        attempt — a stale first_token reports a phantom TTFT for a request
+        that never decoded on the new attempt."""
+        sim = Simulation(_cfg("netkv-full"))
+        sim.load_trace([])
+        rs = RequestState(req=TRACE[0], kv_bytes=1e6)
+        rs.sched_time = 1.0
+        rs.first_token = 2.0
+        rs.admit_time = 1.5
+        rs.tier = 3
+        rs.s_eff = 5e5
+        rs.hit_tokens = 128.0
+        rs.decode_instance = 5
+        rs.tokens_out = 7
+        rs.transfer_end = 1.2
+        sim._requeue(rs, 2.5)
+        assert rs.sched_time == -1.0
+        assert rs.first_token == -1.0
+        assert rs.admit_time == -1.0
+        assert rs.tier == -1
+        assert rs.s_eff == 0.0
+        assert rs.hit_tokens == 0.0
+        assert rs.decode_instance == -1
+        assert rs.tokens_out == 0
+        assert rs.transfer_end == -1.0
+        assert rs.requeues == 1 and not rs.rejected
+
+    def test_no_phantom_ttft_after_fault(self):
+        """Every record that reports a finite TTFT actually produced a first
+        token after its last (re)scheduling."""
+        faults = [FaultEvent(time=4.0, kind="kill_decode", instance_id=5)]
+        cfg = _cfg("netkv-full", faults=faults)
+        sim = Simulation(cfg)
+        m = sim.run(TRACE)
+        assert m.requeues > 0
+        for rs in sim.records:
+            if rs.first_token >= 0:
+                assert rs.first_token >= rs.sched_time >= 0
 
 
 class TestDeterminism:
