@@ -1,0 +1,176 @@
+"""Instance-plane throughput: cohort-stepped columnar engine vs the retired
+per-object reference at 64 / 256 / 1024 decode instances.
+
+Three arms per pool size:
+
+* ``steady``  — every instance runs a full continuous batch (beta = 64) of
+  long-output requests; the engines step K iteration rounds.  The reference
+  pays one heap event + a Python dict walk per instance per round; the
+  plane pays one cohort clock event with fused array accounting.  This is
+  the simulator's decode hot path at scale.
+* ``churn``   — short outputs with a queued backlog: every round finishes
+  and admits requests, exercising finish bookkeeping, queue admission and
+  the write-through sync.
+* ``hit_row`` — one request scored against every instance's prefix cache:
+  the RadixPlane broadcast LCP vs D per-instance ``hit_tokens`` walks (the
+  per-decision scheduler cost ClusterView exposed in PR 1).
+
+Acceptance floor (CI-gated): the plane must hold >= 10x steady
+iteration-step throughput at 1024 decode instances.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.cost import H100_TP4_ITER, H100_TP4_PREFILL, LLAMA3_70B_KV
+from repro.core.view import ClusterView
+from repro.sim import EventLoop, InstancePlane, ReferenceInstanceEngine, RequestState
+from repro.traces.mooncake import Request
+
+from .common import emit, write_csv
+
+SIZES = [64, 256, 1024]
+QUICK_SIZES = [64, 1024]    # CI smoke reaches the acceptance size
+BETA = 64                   # full continuous batch per instance
+ROUNDS = 10                 # iteration rounds timed per arm
+SPEEDUP_FLOOR = 10.0        # required plane/reference ratio at 1024
+
+
+class _Meta:
+    def __init__(self, iid, srv):
+        self.instance_id, self.server = iid, srv
+
+
+def _mk_engine(kind: str, n_dec: int):
+    loop = EventLoop()
+    view = ClusterView(capacity=n_dec)
+    dec = [_Meta(i, (0, 0, i)) for i in range(n_dec)]
+    cls = InstancePlane if kind == "plane" else ReferenceInstanceEngine
+    eng = cls([], dec, view=view, loop=loop, iter_model=H100_TP4_ITER,
+              prefill_model=H100_TP4_PREFILL, beta_max=BETA,
+              kv_spec=LLAMA3_70B_KV, kv_budget=1e18)
+    eng.set_decode_callbacks(None, None)
+    return loop, eng
+
+
+def _req(rid: int, output_len: int, blocks: int = 4) -> RequestState:
+    req = Request(request_id=rid, arrival=0.0, input_len=blocks * 16,
+                  output_len=output_len,
+                  block_hashes=tuple((rid, j) for j in range(blocks)),
+                  share_group=-1, slo=5.0)
+    return RequestState(req=req, kv_bytes=1e6)
+
+
+def _populate(eng, n_dec: int, per_inst: int, output_len: int):
+    rid = 0
+    for i in range(n_dec):
+        for _ in range(per_inst):
+            eng.enqueue(i, _req(rid, output_len), 0.0)
+            rid += 1
+    eng.kick(range(n_dec), 0.0)
+
+
+def _steady(kind: str, n_dec: int) -> float:
+    """Wall seconds for ROUNDS synchronized full-batch iteration rounds."""
+    loop, eng = _mk_engine(kind, n_dec)
+    _populate(eng, n_dec, BETA, output_len=10**9)
+    horizon = ROUNDS * H100_TP4_ITER(BETA) * 1.001
+    t0 = time.perf_counter()
+    loop.run(until=horizon)
+    wall = time.perf_counter() - t0
+    assert eng.total_iterations == n_dec * ROUNDS
+    return wall
+
+
+def _churn(kind: str, n_dec: int) -> float:
+    """Wall seconds for ROUNDS rounds of finish-heavy decoding with a
+    queued backlog (every round retires and admits a slice of the batch)."""
+    loop, eng = _mk_engine(kind, n_dec)
+    # Outputs 1..4 tokens: a quarter of the batch turns over each round.
+    rid = 0
+    for i in range(n_dec):
+        for b in range(BETA * 2):       # half active, half queued backlog
+            eng.enqueue(i, _req(rid, output_len=(b % 4) + 1), 0.0)
+            rid += 1
+    eng.kick(range(n_dec), 0.0)
+    horizon = ROUNDS * H100_TP4_ITER(BETA) * 1.001
+    t0 = time.perf_counter()
+    loop.run(until=horizon)
+    return time.perf_counter() - t0
+
+
+def _hit_row(kind: str, n_dec: int, blocks: int = 128, reps: int = 20) -> float:
+    """Per-decision scoring cost: one request vs every instance's cache.
+
+    Every instance caches a random-depth slice of one shared prefix chain
+    and the probe asks for the full chain, so each per-instance LCP walk
+    (and the broadcast comparison) has real depth — the prefix-reuse regime
+    the scheduler actually scores in, not the all-miss fast exit.
+    """
+    _, eng = _mk_engine(kind, n_dec)
+    rng = np.random.default_rng(0)
+    shared = tuple(("shared", j) for j in range(blocks))
+    for i in range(n_dec):
+        depth = int(rng.integers(blocks // 4, blocks + 1))
+        req = Request(request_id=10_000 + i, arrival=0.0,
+                      input_len=depth * 16, output_len=10**9,
+                      block_hashes=shared[:depth], share_group=0, slo=5.0)
+        eng.enqueue(i, RequestState(req=req, kv_bytes=1e6), 0.0)
+    probe = Request(request_id=99_999, arrival=0.0, input_len=blocks * 16,
+                    output_len=8, block_hashes=shared, share_group=0, slo=5.0)
+    eng.fill_hits(probe)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eng.fill_hits(probe)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = False) -> list[dict]:
+    sizes = QUICK_SIZES if quick else SIZES
+    rows = []
+    for n in sizes:
+        row = dict(decode_instances=n)
+        plane_s = _steady("plane", n)
+        ref_s = _steady("reference", n)
+        row["plane_steady_iters_per_s"] = n * ROUNDS / plane_s
+        row["ref_steady_iters_per_s"] = n * ROUNDS / ref_s
+        row["steady_speedup"] = ref_s / plane_s
+        row["plane_churn_s"] = _churn("plane", n)
+        row["ref_churn_s"] = _churn("reference", n)
+        row["churn_speedup"] = row["ref_churn_s"] / row["plane_churn_s"]
+        row["plane_hit_row_us"] = _hit_row("plane", n) * 1e6
+        row["ref_hit_row_us"] = _hit_row("reference", n) * 1e6
+        row["hit_row_speedup"] = row["ref_hit_row_us"] / row["plane_hit_row_us"]
+        print(f"  decode_throughput D={n}: steady {row['steady_speedup']:.1f}x "
+              f"({row['plane_steady_iters_per_s']:.0f} vs "
+              f"{row['ref_steady_iters_per_s']:.0f} inst-iter/s) "
+              f"churn {row['churn_speedup']:.1f}x "
+              f"hit_row {row['hit_row_speedup']:.1f}x")
+        rows.append(row)
+    write_csv("decode_throughput", rows)
+    # Acceptance gate, enforced wherever the 1024 arm runs (incl. CI smoke).
+    for r in rows:
+        if r["decode_instances"] >= 1024:
+            assert r["steady_speedup"] >= SPEEDUP_FLOOR, (
+                f"InstancePlane steady speedup {r['steady_speedup']:.1f}x at "
+                f"{r['decode_instances']} instances is below the "
+                f"{SPEEDUP_FLOOR:.0f}x floor")
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    best = rows[-1]
+    emit("decode_throughput", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"D{best['decode_instances']}:steady={best['steady_speedup']:.0f}x,"
+         f"churn={best['churn_speedup']:.1f}x,"
+         f"hit_row={best['hit_row_speedup']:.1f}x")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

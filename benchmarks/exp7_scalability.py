@@ -49,6 +49,7 @@ def run(quick: bool = False) -> list[dict]:
             runs = []
             lat = []
             events = sim_secs = wall = 0.0
+            decode_iters = 0
             for seed in range(n_seeds):
                 trace = generate_trace("rag", duration=k["duration"],
                                        target_rps=cap, seed=seed)
@@ -64,18 +65,21 @@ def run(quick: bool = False) -> list[dict]:
                 wall += time.perf_counter() - t0
                 events += sim.loop.processed
                 sim_secs += sim.loop.now
+                decode_iters += sim.engine.total_iterations
                 lat.extend(sim.decision_latencies)
             row = aggregate_seeds(runs)
             row.update(gpus=gpus, n_decode=n_decode,
                        decision_latency_ms=float(np.mean(lat)) * 1e3,
                        decision_latency_p99_ms=float(np.percentile(lat, 99)) * 1e3,
                        events_per_s=events / max(wall, 1e-9),
-                       sim_s_per_wall_s=sim_secs / max(wall, 1e-9))
+                       sim_s_per_wall_s=sim_secs / max(wall, 1e-9),
+                       decode_iters_per_s=decode_iters / max(wall, 1e-9))
             rows.append(row)
             print(f"  exp7 {gpus}gpus {sched}: ttft={row['ttft_mean']*1e3:.0f}ms "
                   f"xfer={row['xfer_mean']*1e3:.0f}ms "
                   f"lat={row['decision_latency_ms']:.3f}ms "
                   f"{row['events_per_s']:.0f}ev/s "
+                  f"{row['decode_iters_per_s']:.0f}dec-iter/s "
                   f"{row['sim_s_per_wall_s']:.1f}x realtime")
     write_csv("exp7_scalability", rows)
     # Per-decision scoring-path comparison at 1024-GPU-class pool sizes:

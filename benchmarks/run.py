@@ -15,6 +15,7 @@ import time
 import traceback
 
 from . import (
+    decode_throughput,
     exp1_load_sweep,
     exp2_context_sweep,
     exp3_topology,
@@ -24,6 +25,7 @@ from . import (
     exp7_scalability,
     exp8_beyond,
     exp9_extensions,
+    net_throughput,
     roofline,
     sched_latency,
 )
@@ -39,6 +41,8 @@ HARNESSES = {
     "exp8": exp8_beyond,           # beyond-paper
     "exp9": exp9_extensions,       # beyond-paper: TP=8 + multihop staging
     "sched_latency": sched_latency,
+    "net_throughput": net_throughput,      # FlowPlane vs reference engine
+    "decode_throughput": decode_throughput,  # InstancePlane vs reference
     "roofline": roofline,          # §Roofline (reads dry-run artifacts)
 }
 

@@ -138,6 +138,10 @@ class FlowPlane:
         self._slot_order: dict[int, None] = {}
         self._transfers: dict[int, Transfer] = {}         # open transfers
         self._tslots: dict[int, list[int]] = {}           # transfer -> slots
+        # Arrival epoch: while open, start_transfer defers its rate
+        # recomputation and accumulates dirty links; end_epoch runs one
+        # union recompute (see begin_epoch).
+        self._epoch_dirty: list[np.ndarray] | None = None
         # ---- residual capacity plane (piecewise-constant bg sampling) ----
         self._resid_caps = np.empty(tree.n_links + 1, np.float64)
         self._sample_background(0.0)
@@ -222,8 +226,35 @@ class FlowPlane:
             t.flows_open += 1
         self._transfers[t.transfer_id] = t
         self._tslots[t.transfer_id] = slots
-        self._recompute_rates(dirty_links=row[:plen])
+        if self._epoch_dirty is not None:
+            self._epoch_dirty.append(row[:plen])
+        else:
+            self._recompute_rates(dirty_links=row[:plen])
         return t
+
+    # -------------------------------------------------------- arrival epochs
+    @property
+    def in_epoch(self) -> bool:
+        return self._epoch_dirty is not None
+
+    def begin_epoch(self) -> None:
+        """Batch same-instant transfer arrivals into one rate recompute.
+
+        Water-filling rates depend only on the *current* flow set, so
+        admitting a burst of same-timestamp transfers and recomputing once
+        over the union of their dirty links yields bit-identical final
+        rates to the per-arrival recompute sequence (no time passes between
+        the arrivals, so no bytes drain at the intermediate rates) — one
+        dirty-component pass instead of one per transfer.
+        """
+        if self._epoch_dirty is not None:
+            raise RuntimeError("FlowPlane epoch already open")
+        self._epoch_dirty = []
+
+    def end_epoch(self) -> None:
+        dirty, self._epoch_dirty = self._epoch_dirty, None
+        if dirty:
+            self._recompute_rates(dirty_links=np.concatenate(dirty))
 
     def abort_transfer(self, transfer: Transfer, now: float) -> None:
         self.advance(now)
@@ -399,13 +430,42 @@ class FlowPlane:
     def link_utilization(self) -> tuple[np.ndarray, np.ndarray]:
         """(per-link aggregate flow rate, residual capacity) diagnostics.
 
-        Real (non-padding) links only; used by the max-min invariant tests.
+        Real (non-padding) links only; feeds the max-min invariant tests and
+        the measured-telemetry oracle aggregation.
         """
         load = np.zeros(self._pad + 1, np.float64)
-        for s in self._slot_order:
-            load[self.f_path[s]] += self.f_rate[s]
+        if self._slot_order:
+            slots = self._ordered_slots()
+            np.add.at(load, self.f_path[slots].ravel(),
+                      np.repeat(self.f_rate[slots], self.f_path.shape[1]))
         load[self._pad] = 0.0
         return load[:-1], self._resid_caps[:-1].copy()
+
+    def measured_tier_congestion(self, now: float, include_kv: bool = True
+                                 ) -> dict[int, float]:
+        """Per-tier congestion aggregated from *measured* link counters.
+
+        Instead of the background model's ground truth
+        (``tier_congestion``), this sums what switch byte counters would
+        report on every link of a tier — background occupancy
+        (capacity - residual) plus, with ``include_kv``, the scheduler's own
+        in-flight KV flow rates (an operator whose aggregation cannot
+        subtract the KV DSCP class) — divided by the tier's aggregate raw
+        capacity.  This is the realistic telemetry regime for the staleness
+        experiments: the signal now contains self-traffic feedback and
+        ECMP-imbalance noise the mean-field model hides.
+        """
+        load, resid = self.link_utilization()
+        cap = self.tree.link_capacity
+        used = cap - resid
+        if include_kv:
+            used = used + np.minimum(load, resid)
+        tiers = self.tree.link_tier
+        cap_t = np.bincount(tiers, weights=cap, minlength=4)[:4]
+        used_t = np.bincount(tiers, weights=used, minlength=4)[:4]
+        with np.errstate(invalid="ignore", divide="ignore"):
+            u = np.where(cap_t > 0, used_t / np.maximum(cap_t, 1e-12), 0.0)
+        return {t: float(np.clip(u[t], 0.0, 0.999)) for t in range(4)}
 
     # ---------------------------------------------------------------- debug
     @property

@@ -117,6 +117,22 @@ class IterTimeModel:
         return t
 
 
+def iter_time_vector(model: "IterTimeModel", beta) -> "np.ndarray":
+    """Vectorised ``IterTimeModel.__call__`` over a beta array.
+
+    Element-for-element the same IEEE operation sequence as the scalar
+    call (the InstancePlane's cohort deadline computation relies on this
+    for bit-exact parity with the per-object reference engine).
+    """
+    import numpy as np
+
+    beta = np.asarray(beta)
+    t = model.a + model.b * np.maximum(beta, 0.0)
+    for brk, slope in zip(model.breaks, model.slopes):
+        t = np.where(beta > brk, t + slope * (beta - brk), t)
+    return t
+
+
 @dataclasses.dataclass(frozen=True)
 class PrefillTimeModel:
     """T_prefill(l) = c * l + d (piecewise-linear in prompt length)."""

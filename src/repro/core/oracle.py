@@ -78,6 +78,17 @@ class NetworkCostOracle:
     of switch counters (INT/sFlow/SNMP), *excluding* the scheduler's own
     marked KV flows (DSCP class), per §III-D.  The scheduler only ever sees
     the last published snapshot.
+
+    ``source`` selects where the congestion signal comes from:
+
+    * ``"model"`` (default) — ``telemetry_fn``, the background model's
+      ground-truth per-tier utilisation (the paper's idealised operator).
+    * ``"measured"`` — ``measured_fn``, per-tier congestion aggregated from
+      the network plane's *per-link byte counters*, including the
+      scheduler's own in-flight KV traffic (an operator that cannot
+      subtract the KV DSCP class).  This opens a realistic telemetry-noise
+      axis for the staleness experiments
+      (``FlowPlane.measured_tier_congestion``).
     """
 
     def __init__(
@@ -87,11 +98,19 @@ class NetworkCostOracle:
         tier_latency: Mapping[int, float] | None = None,
         telemetry_fn: Callable[[float], Mapping[int, float]] | None = None,
         refresh_interval: float = 1.0,
+        measured_fn: Callable[[float], Mapping[int, float]] | None = None,
+        source: str = "model",
     ) -> None:
+        if source not in ("model", "measured"):
+            raise ValueError(f"unknown telemetry source {source!r}")
+        if source == "measured" and measured_fn is None:
+            raise ValueError("source='measured' requires measured_fn")
         self.tier_of = tier_of
         self.tier_bandwidth = dict(tier_bandwidth or PAPER_TIER_BANDWIDTH)
         self.tier_latency = dict(tier_latency or PAPER_TIER_LATENCY)
         self._telemetry_fn = telemetry_fn or (lambda now: {t: 0.0 for t in TIERS})
+        self._measured_fn = measured_fn
+        self.source = source
         self.refresh_interval = refresh_interval
         self._last_refresh = -float("inf")
         self._snapshot: OracleView | None = None
@@ -101,7 +120,8 @@ class NetworkCostOracle:
     def view(self, now: float) -> OracleView:
         """Return the current snapshot, refreshing if the interval elapsed."""
         if self._snapshot is None or now - self._last_refresh >= self.refresh_interval:
-            congestion = {t: float(np.clip(c, 0.0, 0.999)) for t, c in self._telemetry_fn(now).items()}
+            fn = self._measured_fn if self.source == "measured" else self._telemetry_fn
+            congestion = {t: float(np.clip(c, 0.0, 0.999)) for t, c in fn(now).items()}
             for t in TIERS:
                 congestion.setdefault(t, 0.0)
             self._snapshot = OracleView(

@@ -4,10 +4,14 @@ The seed scored candidates by rebuilding a list of ``CandidateState``
 dataclasses from scratch on every scheduling event and looping over it in
 Python.  At 1000-GPU scale that rebuild+loop *is* the scheduler hot path
 (the paper reports 1.5 ms/decision at 1024 GPUs, §VI exp7).  ``ClusterView``
-replaces it with one set of parallel NumPy columns that the decode-instance
-simulators maintain **incrementally**: every DecodeSim mutation writes
-through to its column slot, so a scheduling event reads the current cluster
-state with zero allocation and scores all D candidates as array ops.
+replaces it with one set of parallel NumPy columns that the instance engine
+maintains **incrementally**: the columnar ``InstancePlane`` syncs every
+scheduler-visible scalar in one vectorised assignment per event (the
+retired per-object ``DecodeSim`` writes its slot on each mutation), so a
+scheduling event reads the current cluster state with zero allocation and
+scores all D candidates as array ops.  ``free_memory`` is clamped at zero
+by the writers: decode-side KV growth may overcommit the budget, and a
+negative value would score as phantom negative capacity.
 
 Columns (all length ``n``, slot-indexed):
 

@@ -1,13 +1,16 @@
 """Discrete-event disaggregated-serving simulator."""
 
 from .engine import EventLoop
-from .kvcache import B_TOK, BlockCache, n_blocks
-from .instances import DecodeSim, PrefillSim, RequestState
+from .kvcache import B_TOK, BlockCache, RadixPlane, n_blocks
+from .instances import DecodeHandle, InstancePlane, PrefillHandle, RequestState
+from .reference import DecodeSim, PrefillSim, ReferenceInstanceEngine
 from .metrics import RunMetrics, aggregate_seeds, summarize
 from .simulator import FaultEvent, SimConfig, Simulation, run_sim
 
 __all__ = [
-    "EventLoop", "B_TOK", "BlockCache", "n_blocks", "DecodeSim", "PrefillSim",
+    "EventLoop", "B_TOK", "BlockCache", "RadixPlane", "n_blocks",
+    "InstancePlane", "DecodeHandle", "PrefillHandle",
+    "DecodeSim", "PrefillSim", "ReferenceInstanceEngine",
     "RequestState", "RunMetrics", "aggregate_seeds", "summarize",
     "FaultEvent", "SimConfig", "Simulation", "run_sim",
 ]

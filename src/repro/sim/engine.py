@@ -71,3 +71,14 @@ class EventLoop:
         heap, and ``Simulation._net_tick`` calls this every 0.1 s of sim time.
         """
         return self._live == 0
+
+    def next_time(self) -> float | None:
+        """Fire time of the earliest live event (None when idle).
+
+        Lazily pops cancelled heap heads so repeated peeks stay O(1)
+        amortised; used by drivers that pace a simulation from outside
+        (``benchmarks/decode_throughput.py``).
+        """
+        while self._heap and self._heap[0].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0].time if self._heap else None

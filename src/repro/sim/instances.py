@@ -1,24 +1,40 @@
-"""Prefill / decode instance models with continuous batching (§III-C, §VI-B).
+"""InstancePlane: columnar prefill/decode lifecycle engine (§III-C, §VI-B).
 
-PrefillSim: serial compute queue, T_prefill(l) = c*l + d.  The prefill-side
-KV buffer is held until the transfer-complete callback (vLLM KVConnector
-semantics), so a decode-instance failure during transfer can re-schedule
-without re-running prefill.
+The retired per-object engine (kept verbatim in ``sim/reference.py``) posts
+one heap event per decode instance per continuous-batching iteration and
+walks a Python dict of ``RequestState`` per token — at 1000-instance scale
+that bookkeeping *is* the simulator hot path.  ``InstancePlane`` replaces it
+with struct-of-arrays state and a single **cohort-stepped iteration clock**:
 
-DecodeSim: continuous batching at iteration boundaries (Orca-style): a
-request arriving mid-iteration waits for the current step to finish before
-joining the active batch; each iteration every active request emits one
-token.  Memory: aggregate KV budget; active (pinned) KV plus an LRU block
-cache of completed prefixes (evictable, so it counts as free to the
-scheduler, matching vLLM block-manager semantics).
+* **Instance columns** (slot-indexed, aligned with ``ClusterView`` slots):
+  active count, queue length, pinned KV bytes, per-instance budget, true and
+  EWMA-estimated straggler scale, iteration count, and the *next-iteration
+  deadline* (``+inf`` when idle).  One event-loop timer fires at the minimum
+  deadline and steps the whole cohort of instances due at that instant —
+  replacing D per-instance ``_iter_done`` events with one.
+* **Request table**: active decoding requests live in parallel columns
+  (tokens_out / output_len / instance slot / admission seq / object ref), so
+  per-iteration token accounting, first-token detection, finish detection
+  and decode-side KV growth are fused array ops over the cohort's rows.
+* **Prefill columns**: serial prefill queues keep per-instance
+  ``busy_until`` and an *exact left-fold* ETA column, so arrival routing
+  (min-ETA healthy instance) is one masked argmin instead of a Python scan
+  that re-sums every queue.
+* **RadixPlane cache**: per-instance prefix caches share one packed
+  presence bitmask, so lambda_r(d) against all D instances is a single
+  broadcast LCP (``fill_hits``).
+* **Write-through**: scheduler-visible scalars sync to the ``ClusterView``
+  columns in one vectorised assignment per event (the one column never
+  written here is ``healthy`` — that flips only via ``mark_detected`` after
+  the fault-detection delay; see Simulation._on_fault).
 
-Scheduler-visible state lives in a shared ``ClusterView`` column plane:
-every DecodeSim mutation writes its (free_memory, queued, batch,
-iter_scale_est) scalars through to its column slot, so scheduling events
-read current cluster state with zero per-request rebuilding.  The one
-column a DecodeSim never writes is ``healthy`` — health becomes
-scheduler-visible only via ``mark_detected`` after the fault detection
-delay (see Simulation._on_fault).
+Semantics are bit-identical to the reference engine — same TTFT/TBT/finish
+times, same cache-hit tokens, same RNG stream consumption downstream —
+enforced by ``tests/test_instanceplane_parity.py`` on seeded 64/256-GPU
+runs.  Within one clock tick the cohort's instances are processed in slot
+order; the reference interleaves per-instance events by heap sequence, but
+same-timestamp instance steps are independent (per-instance accumulators,
+per-request fields), so outcomes agree exactly.
 """
 
 from __future__ import annotations
@@ -27,11 +43,19 @@ import dataclasses
 from collections import deque
 from typing import Callable, Optional
 
-from repro.core.cost import IterTimeModel, ModelKVSpec, PrefillTimeModel
+import numpy as np
+
+from repro.core.cost import (
+    B_TOK,
+    IterTimeModel,
+    ModelKVSpec,
+    PrefillTimeModel,
+    iter_time_vector,
+)
 from repro.core.view import ClusterView
 from repro.traces.mooncake import Request
 from .engine import EventLoop
-from .kvcache import B_TOK, BlockCache
+from .kvcache import RadixPlane
 
 
 @dataclasses.dataclass
@@ -60,206 +84,645 @@ class RequestState:
         return self.first_token - self.req.arrival if self.first_token >= 0 else float("inf")
 
 
-class PrefillSim:
-    def __init__(self, instance_id: int, server, prefill_model: PrefillTimeModel,
-                 loop: EventLoop):
-        self.instance_id = instance_id
-        self.server = server
-        self.model = prefill_model
-        self.loop = loop
-        self.busy_until = 0.0
-        self.queue: deque[RequestState] = deque()
-        self.running: Optional[RequestState] = None
-        self.on_done: Callable[[RequestState, float], None] | None = None
-        self.healthy = True
+class PrefillHandle:
+    """Per-instance window into the prefill columns (test/driver surface)."""
 
-    def submit(self, rs: RequestState, now: float) -> None:
-        rs.prefill_instance = self.instance_id
-        self.queue.append(rs)
-        self._maybe_start(now)
+    __slots__ = ("_p", "s")
 
-    def eta(self, now: float) -> float:
-        """Earliest time a new request would *finish* prefill here."""
-        t = max(self.busy_until, now)
-        for rs in self.queue:
-            t += self.model(rs.req.input_len)
-        return t
+    def __init__(self, plane: "InstancePlane", s: int):
+        self._p = plane
+        self.s = s
 
-    def _maybe_start(self, now: float) -> None:
-        if self.running is not None or not self.queue or not self.healthy:
-            return
-        rs = self.queue.popleft()
-        self.running = rs
-        rs.prefill_start = max(now, self.busy_until)
-        dur = self.model(rs.req.input_len)
-        self.busy_until = rs.prefill_start + dur
-        self.loop.at(self.busy_until, self._finish)
-
-    def _finish(self, now: float) -> None:
-        rs = self.running
-        if rs is None:
-            return
-        rs.prefill_end = now
-        self.running = None
-        if self.on_done is not None:
-            self.on_done(rs, now)
-        self._maybe_start(now)
-
-
-class DecodeSim:
-    def __init__(
-        self,
-        instance_id: int,
-        server,
-        iter_model: IterTimeModel,
-        beta_max: int,
-        kv_budget: float,
-        kv_spec: ModelKVSpec,
-        loop: EventLoop,
-        view: Optional[ClusterView] = None,
-    ):
-        self.instance_id = instance_id
-        self.server = server
-        self.iter_model = iter_model
-        self.beta_max = beta_max
-        self.kv_budget = kv_budget
-        self.kv_spec = kv_spec
-        self.loop = loop
-        self.cache = BlockCache(kv_budget, bytes_per_block=kv_spec.kv_bytes_per_token * B_TOK)
-        self.active: dict[int, RequestState] = {}
-        self.queue: deque[RequestState] = deque()
-        self.pinned_bytes = 0.0
-        self.healthy = True
-        self.iter_scale = 1.0          # true slowdown factor (straggler)
-        self.iter_scale_est = 1.0      # scheduler-visible EWMA estimate
-        self._iterating = False
-        self._iter_event = None
-        self.iterations = 0
-        self.on_first_token: Callable[[RequestState, float], None] | None = None
-        self.on_finish: Callable[[RequestState, float], None] | None = None
-        self.view = view
-        self.slot = view.add_instance(
-            instance_id, free_memory=kv_budget, healthy=True
-        ) if view is not None else -1
-
-    # ---- scheduler-visible state (§III-C) --------------------------------
     @property
-    def beta(self) -> int:
-        return len(self.active)
+    def instance_id(self) -> int:
+        return int(self._p.p_ids[self.s])
+
+    @property
+    def server(self):
+        return self._p.p_server[self.s]
+
+    @property
+    def healthy(self) -> bool:
+        return bool(self._p.p_healthy[self.s])
+
+    @healthy.setter
+    def healthy(self, v: bool) -> None:
+        self._p.p_healthy[self.s] = bool(v)
+
+    @property
+    def busy_until(self) -> float:
+        return float(self._p.p_busy[self.s])
 
     @property
     def queued(self) -> int:
-        return len(self.queue)
+        return int(self._p.p_qlen[self.s])
+
+    def submit(self, rs: RequestState, now: float) -> None:
+        self._p.submit_prefill(self.s, rs, now)
+
+    def eta(self, now: float) -> float:
+        p = self._p
+        if p.p_qlen[self.s] > 0:
+            return float(p.p_eta[self.s])
+        return float(max(p.p_busy[self.s], now))
+
+
+class DecodeHandle:
+    """Per-instance window into the decode columns (test/driver surface)."""
+
+    __slots__ = ("_p", "slot")
+
+    def __init__(self, plane: "InstancePlane", slot: int):
+        self._p = plane
+        self.slot = slot
+
+    @property
+    def instance_id(self) -> int:
+        return int(self._p.d_ids[self.slot])
+
+    @property
+    def server(self):
+        return self._p.d_server[self.slot]
+
+    @property
+    def healthy(self) -> bool:
+        """Engine-side truth (scheduler sees view.healthy, which lags)."""
+        return bool(self._p.d_healthy[self.slot])
+
+    @property
+    def iterations(self) -> int:
+        return int(self._p.d_iterations[self.slot])
+
+    @property
+    def iter_scale(self) -> float:
+        return float(self._p.d_iter_scale[self.slot])
+
+    @iter_scale.setter
+    def iter_scale(self, v: float) -> None:
+        self._p.d_iter_scale[self.slot] = float(v)
+
+    @property
+    def iter_scale_est(self) -> float:
+        return float(self._p.d_iter_scale_est[self.slot])
+
+    @property
+    def beta(self) -> int:
+        return int(self._p.d_active[self.slot])
+
+    @property
+    def queued(self) -> int:
+        return int(self._p.d_qlen[self.slot])
 
     @property
     def free_memory(self) -> float:
-        # LRU cache is evictable => counts as free.
-        return self.kv_budget - self.pinned_bytes
+        p = self._p
+        return float(max(p.d_budget[self.slot] - p.d_pinned[self.slot], 0.0))
+
+    @property
+    def pinned_bytes(self) -> float:
+        return float(self._p.d_pinned[self.slot])
 
     def hit_tokens(self, req: Request) -> int:
-        return self.cache.hit_tokens(req.block_hashes, req.input_len)
+        return self._p.cache.hit_tokens(self.slot, req.block_hashes, req.input_len)
 
-    def _sync(self) -> None:
-        """Write scheduler-visible scalars through to the view column slot."""
+
+class InstancePlane:
+    """Struct-of-arrays prefill/decode engine with one cohort iteration clock."""
+
+    kind = "plane"
+
+    def __init__(self, pre_meta, dec_meta, *, view: ClusterView, loop: EventLoop,
+                 iter_model: IterTimeModel, prefill_model: PrefillTimeModel,
+                 beta_max: int, kv_spec: ModelKVSpec, kv_budget: float):
+        self.view = view
+        self.loop = loop
+        self.iter_model = iter_model
+        self.prefill_model = prefill_model
+        self.beta_max = beta_max
+        self.kv_spec = kv_spec
+        self.kv_budget = kv_budget
+        self.kv_per_token = kv_spec.kv_bytes_per_token
+        self.on_prefill_done: Callable[[RequestState, float], None] | None = None
+        self._on_first_token: Callable | None = None
+        self._on_finish: Callable | None = None
+
+        # ---------- prefill columns (fixed membership) --------------------
+        n_pre = len(pre_meta)
+        self.n_pre = n_pre
+        self.p_ids = np.array([m.instance_id for m in pre_meta], np.int64)
+        self.p_server = [m.server for m in pre_meta]
+        self.p_busy = np.zeros(n_pre, np.float64)
+        # Exact left-fold ETA: when the queue is non-empty this equals the
+        # reference's  max(busy, now) + sum(T_prefill)  walk bit-for-bit
+        # (queue non-empty implies running implies busy_until >= now).
+        self.p_eta = np.zeros(n_pre, np.float64)
+        self.p_qlen = np.zeros(n_pre, np.int64)
+        self.p_healthy = np.ones(n_pre, bool)
+        self.p_queue: list[deque] = [deque() for _ in range(n_pre)]
+        self.p_running: list[Optional[RequestState]] = [None] * n_pre
+        self.prefill = [PrefillHandle(self, s) for s in range(n_pre)]
+
+        # ---------- decode columns (elastic membership) -------------------
+        cap = max(len(dec_meta), 1)
+        self.n_dec = 0
+        self.d_ids = np.zeros(cap, np.int64)
+        self.d_server: list = []
+        self.d_budget = np.zeros(cap, np.float64)
+        self.d_pinned = np.zeros(cap, np.float64)
+        self.d_active = np.zeros(cap, np.int64)
+        self.d_qlen = np.zeros(cap, np.int64)
+        self.d_healthy = np.zeros(cap, bool)
+        self.d_iter_scale = np.ones(cap, np.float64)
+        self.d_iter_scale_est = np.ones(cap, np.float64)
+        self.d_iterations = np.zeros(cap, np.int64)
+        self.d_deadline = np.full(cap, np.inf, np.float64)
+        self.d_queue: list[deque] = []
+        self.decode: list[DecodeHandle] = []
+        self.cache = RadixPlane(
+            kv_spec.kv_bytes_per_token * B_TOK,
+            instance_capacity=cap,
+        )
+
+        # ---------- request table (active decoding requests) --------------
+        rcap = 64
+        self.r_live = np.zeros(rcap, bool)
+        self.r_tokens = np.zeros(rcap, np.int64)
+        self.r_out = np.zeros(rcap, np.int64)
+        self.r_inst = np.zeros(rcap, np.int64)
+        self.r_seq = np.zeros(rcap, np.int64)
+        self.r_obj: list[Optional[RequestState]] = [None] * rcap
+        self._r_free: list[int] = list(range(rcap - 1, -1, -1))
+        self._r_hi = 0            # rows ever allocated (scan bound)
+        self._next_seq = 0        # global admission sequence
+        # Admission-ordered row indices per instance: lets small cohorts
+        # step through a scalar fast path (identical arithmetic, no
+        # full-table scan) while large cohorts take the fused array path.
+        self._inst_rows: list[list[int]] = []
+        self.scalar_rows_max = 256   # cohort row count below which the
+        #                              scalar path runs (tests pin 0 / inf
+        #                              to force either path)
+
+        # ---------- cohort iteration clock --------------------------------
+        self._clock_ev = None
+        self._clock_at = np.inf
+
+        for m in dec_meta:
+            self.add_decode(m.instance_id, m.server)
+
+    # ------------------------------------------------------------- callbacks
+    def set_decode_callbacks(self, on_first_token, on_finish) -> None:
+        self._on_first_token = on_first_token
+        self._on_finish = on_finish
+
+    # ----------------------------------------------------------------- sync
+    def _sync_slot(self, s: int) -> None:
+        """Write-through for one touched slot (reserve/enqueue/release paths
+        mutate a single instance; rewriting all D columns would put O(D)
+        work on every request event)."""
         v = self.view
-        if v is None:
+        v.free_memory[s] = max(self.d_budget[s] - self.d_pinned[s], 0.0)
+        v.queued[s] = self.d_qlen[s]
+        v.batch[s] = self.d_active[s]
+        v.iter_scale[s] = self.d_iter_scale_est[s]
+
+    def _sync_rows(self, idx: np.ndarray) -> None:
+        """Write-through for a cohort of slots."""
+        v = self.view
+        v.free_memory[idx] = np.maximum(self.d_budget[idx] - self.d_pinned[idx], 0.0)
+        v.queued[idx] = self.d_qlen[idx]
+        v.batch[idx] = self.d_active[idx]
+        v.iter_scale[idx] = self.d_iter_scale_est[idx]
+
+    # --------------------------------------------------------------- prefill
+    def pick_prefill(self, now: float) -> Optional[PrefillHandle]:
+        n = self.n_pre
+        if n == 0 or not self.p_healthy[:n].any():
+            return None
+        eta = np.where(self.p_qlen[:n] > 0, self.p_eta[:n],
+                       np.maximum(self.p_busy[:n], now))
+        eta = np.where(self.p_healthy[:n], eta, np.inf)
+        return self.prefill[int(np.argmin(eta))]
+
+    def submit_prefill(self, s: int, rs: RequestState, now: float) -> None:
+        rs.prefill_instance = int(self.p_ids[s])
+        q = self.p_queue[s]
+        q.append(rs)
+        base = self.p_eta[s] if len(q) > 1 else self.p_busy[s]
+        self.p_eta[s] = base + self.prefill_model(rs.req.input_len)
+        self.p_qlen[s] = len(q)
+        self._prefill_start(s, now)
+
+    def _prefill_start(self, s: int, now: float) -> None:
+        if self.p_running[s] is not None or not self.p_queue[s] \
+                or not self.p_healthy[s]:
             return
-        s = self.slot
-        v.free_memory[s] = self.kv_budget - self.pinned_bytes
-        v.queued[s] = len(self.queue)
-        v.batch[s] = len(self.active)
-        v.iter_scale[s] = self.iter_scale_est
+        rs = self.p_queue[s].popleft()
+        self.p_running[s] = rs
+        rs.prefill_start = float(max(now, self.p_busy[s]))
+        dur = self.prefill_model(rs.req.input_len)
+        self.p_busy[s] = rs.prefill_start + dur
+        # Rebuild the ETA fold from the new base — the same left-to-right
+        # addition order the reference's eta() walk performs.
+        eta = self.p_busy[s]
+        for queued in self.p_queue[s]:
+            eta = eta + self.prefill_model(queued.req.input_len)
+        self.p_eta[s] = eta
+        self.p_qlen[s] = len(self.p_queue[s])
+        self.loop.at(float(self.p_busy[s]),
+                     lambda t, s=s: self._prefill_finish(s, t))
 
-    def mark_detected(self, now: float = 0.0) -> None:
-        """Fault detection fired: health becomes scheduler-visible."""
-        if self.view is not None:
-            self.view.healthy[self.slot] = self.healthy
+    def _prefill_finish(self, s: int, now: float) -> None:
+        rs = self.p_running[s]
+        if rs is None:
+            return
+        rs.prefill_end = now
+        self.p_running[s] = None
+        if self.on_prefill_done is not None:
+            self.on_prefill_done(rs, now)
+        self._prefill_start(s, now)
 
-    # ---- lifecycle ---------------------------------------------------------
-    def reserve(self, rs: RequestState, now: float) -> None:
+    # ---------------------------------------------------------------- decode
+    def add_decode(self, iid: int, server, kv_budget: float | None = None
+                   ) -> DecodeHandle:
+        budget = self.kv_budget if kv_budget is None else kv_budget
+        s = self.view.add_instance(iid, free_memory=budget, healthy=True)
+        if s != self.n_dec:  # pragma: no cover - plane is the sole registrar
+            raise RuntimeError("view slots out of step with InstancePlane")
+        if self.n_dec == len(self.d_ids):
+            self._grow_decode()
+        self.n_dec += 1
+        self.d_ids[s] = iid
+        self.d_server.append(server)
+        self.d_budget[s] = budget
+        self.d_pinned[s] = 0.0
+        self.d_active[s] = 0
+        self.d_qlen[s] = 0
+        self.d_healthy[s] = True
+        self.d_iter_scale[s] = 1.0
+        self.d_iter_scale_est[s] = 1.0
+        self.d_iterations[s] = 0
+        self.d_deadline[s] = np.inf
+        self.d_queue.append(deque())
+        self._inst_rows.append([])
+        self.cache.add_instance(budget)
+        h = DecodeHandle(self, s)
+        self.decode.append(h)
+        return h
+
+    def _grow_decode(self) -> None:
+        cap = len(self.d_ids) * 2
+        for name in ("d_ids", "d_budget", "d_pinned", "d_active", "d_qlen",
+                     "d_healthy", "d_iter_scale", "d_iter_scale_est",
+                     "d_iterations"):
+            old = getattr(self, name)
+            new = np.zeros(cap, old.dtype)
+            new[: self.n_dec] = old[: self.n_dec]
+            setattr(self, name, new)
+        dl = np.full(cap, np.inf, np.float64)
+        dl[: self.n_dec] = self.d_deadline[: self.n_dec]
+        self.d_deadline = dl
+
+    def decode_by_id(self, iid: int) -> DecodeHandle:
+        return self.decode[self.view.slot_of(iid)]
+
+    def is_healthy(self, iid: int) -> bool:
+        return bool(self.d_healthy[self.view.slot_of(iid)])
+
+    # --------------------------------------------------------------- scoring
+    def fill_hits(self, req: Request) -> None:
+        """lambda_r(d) for all instances in one broadcast LCP comparison."""
+        self.cache.hit_row(req.block_hashes, req.input_len,
+                           out=self.view.hit_tokens)
+
+    def hit_tokens(self, iid: int, req: Request) -> float:
+        return float(self.cache.hit_tokens(
+            self.view.slot_of(iid), req.block_hashes, req.input_len))
+
+    # -------------------------------------------------------------- lifecycle
+    def reserve(self, iid: int, rs: RequestState, now: float) -> None:
         """Pin KV for an inbound transfer (memory committed at dispatch)."""
-        self.pinned_bytes += rs.kv_bytes
-        self.cache.evict_to(self.pinned_bytes)
-        self._sync()
+        s = self.view.slot_of(iid)
+        self.d_pinned[s] += rs.kv_bytes
+        self.cache.evict_to(s, float(self.d_pinned[s]))
+        self._sync_slot(s)
 
-    def admit_after_transfer(self, rs: RequestState, now: float) -> None:
+    def release(self, iid: int, rs: RequestState) -> None:
+        s = self.view.slot_of(iid)
+        self.d_pinned[s] = max(0.0, float(self.d_pinned[s]) - rs.kv_bytes)
+        self._sync_slot(s)
+
+    def enqueue(self, iid: int, rs: RequestState, now: float) -> None:
         """Transfer landed: blocks now resident; join the batch queue."""
-        self.cache.insert(rs.req.block_hashes, protected=self.pinned_bytes)
-        self.queue.append(rs)
-        self._maybe_iterate(now)
-        self._sync()
+        s = self.view.slot_of(iid)
+        self.cache.insert(s, rs.req.block_hashes,
+                          protected=float(self.d_pinned[s]))
+        self.d_queue[s].append(rs)
+        self.d_qlen[s] += 1
+        self._sync_slot(s)
 
-    def release(self, rs: RequestState) -> None:
-        self.pinned_bytes = max(0.0, self.pinned_bytes - rs.kv_bytes)
-        self._sync()
+    def kick(self, iids, now: float) -> None:
+        """Epoch admission: start/continue iterating every touched instance."""
+        for iid in iids:
+            s = self.view.slot_of(iid)
+            self._maybe_iterate(s, now)
+            self._sync_slot(s)
+        self._reschedule_clock()
 
-    def fail(self, now: float) -> list[RequestState]:
-        """Hard failure: drop all state, return the victims for re-scheduling.
+    def set_iter_scale(self, iid: int, factor: float) -> None:
+        self.d_iter_scale[self.view.slot_of(iid)] = float(factor)
 
-        Engine-side health flips immediately; the *scheduler-visible*
-        ``healthy`` column only flips when ``mark_detected`` fires after the
-        configured detection delay, so dispatches in the window bounce.
+    def mark_detected(self, iid: int, now: float) -> None:
+        """Fault detection fired: health becomes scheduler-visible."""
+        s = self.view.slot_of(iid)
+        self.view.healthy[s] = bool(self.d_healthy[s])
+
+    def fail(self, iid: int, now: float) -> list[RequestState]:
+        """Hard failure: drop all state, return victims for re-scheduling.
+
+        Victims are returned in the reference's order: active requests in
+        admission order, then the queued requests in queue order.
         """
-        self.healthy = False
-        victims = list(self.active.values()) + list(self.queue)
-        self.active.clear()
-        self.queue.clear()
-        self.pinned_bytes = 0.0
-        self.cache = BlockCache(self.kv_budget, self.cache.bytes_per_block)
-        if self._iter_event is not None:
-            self.loop.cancel(self._iter_event)
-            self._iter_event = None
-        self._iterating = False
-        self._sync()
+        s = self.view.slot_of(iid)
+        self.d_healthy[s] = False
+        rows = self._inst_rows[s]
+        self._inst_rows[s] = []
+        victims = [self.r_obj[r] for r in rows]  # admission order
+        victims.extend(self.d_queue[s])
+        for r in rows:
+            self._free_row(r)
+        self.d_queue[s].clear()
+        self.d_qlen[s] = 0
+        self.d_active[s] = 0
+        self.d_pinned[s] = 0.0
+        self.cache.reset_instance(s)
+        self.d_deadline[s] = np.inf
+        self._sync_slot(s)
+        self._reschedule_clock()
         return victims
 
-    # ---- continuous batching ------------------------------------------------
-    def _admit(self, now: float) -> None:
-        while self.queue and len(self.active) < self.beta_max:
-            rs = self.queue.popleft()
-            rs.admit_time = now
-            rs.tbt = self.iter_model(self.beta + 1) * self.iter_scale  # §VI-A: TBT at entry
-            self.active[rs.req.request_id] = rs
+    # ---------------------------------------------------- continuous batching
+    def _reserve_rows(self, k: int) -> None:
+        """Grow the request table until at least ``k`` rows are free."""
+        while len(self._r_free) < k:
+            rcap = len(self.r_live)
+            new_cap = rcap * 2
+            for name in ("r_live", "r_tokens", "r_out", "r_inst", "r_seq"):
+                old = getattr(self, name)
+                new = np.zeros(new_cap, old.dtype)
+                new[:rcap] = old
+                setattr(self, name, new)
+            self.r_obj.extend([None] * rcap)
+            self._r_free.extend(range(new_cap - 1, rcap - 1, -1))
 
-    def _maybe_iterate(self, now: float) -> None:
-        if self._iterating or not self.healthy:
-            return
-        if not self.active and not self.queue:
-            return
-        self._admit(now)
-        if not self.active:
-            return
-        self._iterating = True
-        self._sync()
-        dur = self.iter_model(self.beta) * self.iter_scale
-        self._iter_event = self.loop.after(dur, self._iter_done)
+    def _alloc_row(self) -> int:
+        if not self._r_free:
+            self._reserve_rows(1)
+        r = self._r_free.pop()
+        self._r_hi = max(self._r_hi, r + 1)
+        return r
 
-    def _iter_done(self, now: float) -> None:
-        self._iterating = False
-        self._iter_event = None
-        if not self.healthy:
+    def _free_row(self, r: int) -> None:
+        self.r_live[r] = False
+        self.r_obj[r] = None
+        self._r_free.append(r)
+
+    def _maybe_iterate(self, s: int, now: float) -> None:
+        if self.d_deadline[s] < np.inf or not self.d_healthy[s]:
             return
-        self.iterations += 1
-        # EWMA straggler estimator the scheduler reads (beyond paper, §DESIGN 8).
-        self.iter_scale_est += 0.2 * (self.iter_scale - self.iter_scale_est)
-        finished: list[RequestState] = []
-        for rs in self.active.values():
-            rs.tokens_out += 1
-            if rs.tokens_out == 1:
-                rs.first_token = now
-                if self.on_first_token:
-                    self.on_first_token(rs, now)
-            # Decode-side KV growth: one token per iteration.
-            self.pinned_bytes += self.kv_spec.kv_bytes_per_token
-            if rs.tokens_out >= rs.req.output_len:
-                finished.append(rs)
-        for rs in finished:
-            del self.active[rs.req.request_id]
-            rs.finish = now
-            grown = rs.kv_bytes + rs.req.output_len * self.kv_spec.kv_bytes_per_token
-            self.pinned_bytes = max(0.0, self.pinned_bytes - grown)
-            if self.on_finish:
-                self.on_finish(rs, now)
-        self.cache.evict_to(self.pinned_bytes)
-        self._maybe_iterate(now)
-        self._sync()
+        active = int(self.d_active[s])
+        q = self.d_queue[s]
+        if active == 0 and not q:
+            return
+        if q and active < self.beta_max:
+            # Admit from the queue at the iteration boundary (Orca-style).
+            # Reserve table rows up front: growth reallocates the columns,
+            # which would orphan the locals hoisted below.
+            self._reserve_rows(min(len(q), self.beta_max - active))
+            iter_model = self.iter_model
+            scale = float(self.d_iter_scale[s])
+            r_live, r_tokens = self.r_live, self.r_tokens
+            r_out, r_inst, r_seq = self.r_out, self.r_inst, self.r_seq
+            r_obj = self.r_obj
+            inst_rows = self._inst_rows[s]
+            seq = self._next_seq
+            while q and active < self.beta_max:
+                rs = q.popleft()
+                rs.admit_time = now
+                # §VI-A: TBT at entry — batch size the request joins.
+                rs.tbt = iter_model(active + 1) * scale
+                r = self._alloc_row()
+                r_live[r] = True
+                r_tokens[r] = 0
+                r_out[r] = rs.req.output_len
+                r_inst[r] = s
+                r_seq[r] = seq
+                seq += 1
+                r_obj[r] = rs
+                inst_rows.append(r)
+                active += 1
+            self._next_seq = seq
+            self.d_qlen[s] = len(q)
+            self.d_active[s] = active
+        if active == 0:
+            return
+        dur = self.iter_model(active) * float(self.d_iter_scale[s])
+        self.d_deadline[s] = now + dur
+
+    def _reschedule_clock(self) -> None:
+        n = self.n_dec
+        t = float(self.d_deadline[:n].min()) if n else np.inf
+        if self._clock_ev is not None:
+            if t == self._clock_at and not self._clock_ev.cancelled:
+                return
+            self.loop.cancel(self._clock_ev)
+            self._clock_ev = None
+        if np.isfinite(t):
+            self._clock_ev = self.loop.at(t, self._step)
+            self._clock_at = t
+        else:
+            self._clock_at = np.inf
+
+    def _step(self, now: float) -> None:
+        """Cohort iteration boundary: every instance due at ``now`` steps.
+
+        Token accounting, first-token detection, decode-side KV growth and
+        finish detection are fused array ops over the cohort's request rows;
+        per-finish bookkeeping runs in admission order per instance, exactly
+        reproducing the reference's dict-ordered float accounting.  Small
+        cohorts (<= ``scalar_rows_max`` active rows) take a scalar path over
+        the per-instance row lists instead of the full-table scan — the
+        arithmetic is operation-for-operation the same, so both paths stay
+        bit-identical to the reference (the parity tests pin the threshold
+        to force each).
+        """
+        self._clock_ev = None
+        self._clock_at = np.inf
+        n = self.n_dec
+        cohort = (self.d_deadline[:n] <= now).nonzero()[0]
+        if cohort.size:
+            est = self.d_iter_scale_est
+            if cohort.size == 1:
+                # Overwhelmingly common with staggered deadlines: one
+                # instance due — scalar bookkeeping, same arithmetic.
+                s = int(cohort[0])
+                self.d_deadline[s] = np.inf
+                self.d_iterations[s] += 1
+                est[s] += 0.2 * (self.d_iter_scale[s] - est[s])
+                nrows = len(self._inst_rows[s])
+            else:
+                self.d_deadline[cohort] = np.inf
+                self.d_iterations[cohort] += 1
+                est[cohort] += 0.2 * (self.d_iter_scale[cohort] - est[cohort])
+                nrows = int(self.d_active[cohort].sum())
+            if nrows <= self.scalar_rows_max:
+                self._step_rows_scalar(cohort, now)
+            else:
+                self._step_rows_vector(cohort, now)
+            # Growth may overcommit: evict the LRU cache down to the pin
+            # level on every iterating instance (reference does this each
+            # _iter_done), then start the next iteration / admit waiters.
+            self.cache.evict_cohort(cohort, self.d_pinned[cohort])
+            if cohort.size > 4:
+                # Vector restart for instances with nothing to admit (the
+                # steady-state bulk of a synchronized cohort): deadline =
+                # now + t_iter(beta) * scale, elementwise — the same op
+                # sequence as _maybe_iterate's scalar arithmetic.
+                easy = (self.d_qlen[cohort] == 0) & (self.d_active[cohort] > 0) \
+                    & self.d_healthy[cohort]
+                ez = cohort[easy]
+                if ez.size:
+                    dur = iter_time_vector(self.iter_model, self.d_active[ez]) \
+                        * self.d_iter_scale[ez]
+                    self.d_deadline[ez] = now + dur
+                rest = cohort[~easy]
+            else:
+                rest = cohort
+            for s in rest:
+                self._maybe_iterate(int(s), now)
+            if cohort.size == 1:
+                self._sync_slot(int(cohort[0]))
+            else:
+                self._sync_rows(cohort)
+        self._reschedule_clock()
+
+    def _step_rows_scalar(self, cohort, now: float) -> None:
+        """Small-cohort token accounting: per-row scalar ops, no table scan."""
+        r_tokens, r_out, r_obj = self.r_tokens, self.r_out, self.r_obj
+        pinned = self.d_pinned
+        kpt = float(self.kv_per_token)
+        for s_ in cohort:
+            s = int(s_)
+            rows = self._inst_rows[s]
+            if not rows:
+                continue
+            finished: list[int] = []
+            for r in rows:
+                t = int(r_tokens[r]) + 1
+                r_tokens[r] = t
+                if t == 1:
+                    rs = r_obj[r]
+                    rs.first_token = now
+                    if self._on_first_token:
+                        self._on_first_token(rs, now)
+                # Decode-side KV growth: one token per active request —
+                # one scalar add per request, as the reference does.
+                pinned[s] += kpt
+                if t >= r_out[r]:
+                    finished.append(r)
+            if finished:
+                for r in finished:
+                    rs = r_obj[r]
+                    rs.finish = now
+                    rs.tokens_out = int(r_tokens[r])
+                    grown = rs.kv_bytes + rs.req.output_len * self.kv_per_token
+                    pinned[s] = max(0.0, float(pinned[s]) - grown)
+                    self._free_row(r)
+                    self.d_active[s] -= 1
+                    if self._on_finish:
+                        self._on_finish(rs, now)
+                gone = set(finished)
+                self._inst_rows[s] = [r for r in rows if r not in gone]
+
+    def _step_rows_vector(self, cohort, now: float) -> None:
+        """Large-cohort token accounting: fused array ops over the table."""
+        n = self.n_dec
+        hi = self._r_hi
+        in_cohort = np.zeros(n, bool)
+        in_cohort[cohort] = True
+        rows = (self.r_live[:hi] & in_cohort[self.r_inst[:hi]]).nonzero()[0]
+        if not rows.size:
+            return
+        self.r_tokens[rows] += 1
+        toks = self.r_tokens[rows]
+        for r in rows[toks == 1]:
+            rs = self.r_obj[r]
+            rs.first_token = now
+            if self._on_first_token:
+                self._on_first_token(rs, now)
+        # Decode-side KV growth: one token per active request.  np.add.at
+        # applies the equal-sized additions sequentially per instance
+        # accumulator — bit-identical to the reference's one-request-at-a-
+        # time += loop.
+        np.add.at(self.d_pinned, self.r_inst[rows], float(self.kv_per_token))
+        fin = rows[toks >= self.r_out[rows]]
+        if fin.size:
+            # Finish bookkeeping in admission order per instance — the
+            # reference's dict order, and the order the per-instance
+            # max(0, pinned - grown) clamp sequence depends on.
+            order = np.lexsort((self.r_seq[fin], self.r_inst[fin]))
+            fin = fin[order]
+            fin_rows = fin.tolist()                     # one bulk convert
+            fin_insts = self.r_inst[fin].tolist()
+            fin_toks = self.r_tokens[fin].tolist()
+            r_live, r_obj = self.r_live, self.r_obj
+            free = self._r_free
+            pinned = self.d_pinned
+            active = self.d_active
+            kpt = self.kv_per_token
+            on_finish = self._on_finish
+            touched: dict[int, set] = {}
+            for r, s, t in zip(fin_rows, fin_insts, fin_toks):
+                rs = r_obj[r]
+                rs.finish = now
+                rs.tokens_out = t
+                grown = rs.kv_bytes + rs.req.output_len * kpt
+                pinned[s] = max(0.0, float(pinned[s]) - grown)
+                r_live[r] = False
+                r_obj[r] = None
+                free.append(r)
+                touched.setdefault(s, set()).add(r)
+                active[s] -= 1
+                if on_finish:
+                    on_finish(rs, now)
+            # One admission-order rebuild per touched instance (a per-finish
+            # list.remove would be O(beta) per finished request).
+            for s, gone in touched.items():
+                self._inst_rows[s] = [
+                    r for r in self._inst_rows[s] if r not in gone
+                ]
+
+    def finalize(self) -> None:
+        """Write per-request token counts back to the RequestState objects.
+
+        The reference engine mutates ``rs.tokens_out`` per token; the plane
+        keeps the count columnar and flushes it once at end of run (finished
+        requests are flushed at finish time), so records of requests still
+        decoding at the horizon report the same partial progress.
+        """
+        for r in np.flatnonzero(self.r_live[: self._r_hi]):
+            self.r_obj[r].tokens_out = int(self.r_tokens[r])
+
+    # ------------------------------------------------------------ telemetry
+    @property
+    def total_iterations(self) -> int:
+        return int(self.d_iterations[: self.n_dec].sum())
+
+    def cache_stats(self) -> list[dict]:
+        """Per-instance cache counters for the parity tests."""
+        c = self.cache
+        return [
+            dict(instance_id=int(self.d_ids[s]), hits=int(c.hits[s]),
+                 misses=int(c.misses[s]), evictions=int(c.evictions[s]),
+                 bytes_used=c.bytes_used(s))
+            for s in range(self.n_dec)
+        ]

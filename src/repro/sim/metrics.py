@@ -28,6 +28,7 @@ class RunMetrics:
     decision_latency_mean: float
     decision_latency_p99: float
     requeues: int = 0
+    decode_iterations: int = 0  # continuous-batching steps across instances
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
@@ -38,7 +39,8 @@ class RunMetrics:
 
 
 def summarize(records, *, window: tuple[float, float], scheduler: str,
-              decision_latencies=(), rejected: int = 0) -> RunMetrics:
+              decision_latencies=(), rejected: int = 0,
+              decode_iterations: int = 0) -> RunMetrics:
     """Aggregate per-request records whose ARRIVAL falls in the window."""
     lo, hi = window
     meas = [r for r in records if lo <= r.req.arrival < hi and not r.rejected]
@@ -81,6 +83,7 @@ def summarize(records, *, window: tuple[float, float], scheduler: str,
         decision_latency_mean=float(np.mean(dl)),
         decision_latency_p99=float(np.percentile(dl, 99)),
         requeues=sum(r.requeues for r in meas),
+        decode_iterations=decode_iterations,
     )
 
 

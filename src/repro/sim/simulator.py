@@ -7,6 +7,23 @@ Scheduler decisions use only scheduler-visible state: per-instance compute
 metrics refreshed at each scheduling event and oracle-provided network
 metrics refreshed every Delta_oracle seconds; the scheduler cannot observe
 per-flow network state or future arrivals.
+
+The instance layer is pluggable (``SimConfig.instance_engine``):
+
+* ``"plane"`` (default) — the columnar ``InstancePlane`` with one
+  cohort-stepped iteration clock and the array-backed RadixPlane cache.
+* ``"reference"`` — the retired per-object ``PrefillSim``/``DecodeSim``
+  engine (``sim/reference.py``), kept as the bit-exact parity oracle and
+  benchmark baseline.
+
+Admission is **epoch-batched**: every transfer completion the FlowPlane
+pops at one net instant is enqueued first, then each touched decode
+instance is kicked exactly once — so same-instant landings on an idle
+instance join the same first iteration, and the network sees one
+``_reschedule_net`` per epoch.  Window-batched scheduling (netkv-batch)
+similarly opens a FlowPlane *arrival epoch* around its dispatch burst: all
+transfers start, then one union dirty-component rate recompute runs
+(bit-identical rates; see ``FlowPlane.begin_epoch``).
 """
 
 from __future__ import annotations
@@ -34,8 +51,9 @@ from repro.cluster.network import BackgroundTraffic, FlowPlane, Transfer
 from repro.cluster.topology import FatTree, make_instances
 from repro.traces.mooncake import Request
 from .engine import EventLoop
-from .instances import DecodeSim, PrefillSim, RequestState
+from .instances import InstancePlane, RequestState
 from .metrics import RunMetrics, summarize
+from .reference import ReferenceInstanceEngine
 
 
 @dataclasses.dataclass
@@ -69,8 +87,10 @@ class SimConfig:
     iter_model: IterTimeModel = H100_TP4_ITER
     prefill_model: PrefillTimeModel = H100_TP4_PREFILL
     m_min: float = 2e9
+    instance_engine: str = "plane"          # "plane" | "reference"
     # oracle / network
     oracle_refresh: float = 1.0
+    telemetry_source: str = "model"         # "model" | "measured"
     background: float | dict = 0.0
     bg_wander: float = 0.25
     inflight_cap: int = 16
@@ -100,30 +120,33 @@ class Simulation:
         self.net = FlowPlane(self.tree, self.bg, seed=cfg.seed)
         pre_meta, dec_meta = make_instances(self.tree, tp=cfg.tp, n_prefill=cfg.n_prefill)
         kv_budget = cfg.hbm_free_per_gpu * cfg.tp
-        self.prefill = [
-            PrefillSim(m.instance_id, m.server, cfg.prefill_model, self.loop)
-            for m in pre_meta
-        ]
         self._server_of = {
             i.instance_id: i.server for i in (*pre_meta, *dec_meta)
         }
         # Columnar scheduler-visible state plane, maintained incrementally by
-        # each DecodeSim (write-through), never rebuilt per request.
+        # the instance engine (write-through), never rebuilt per request.
         self.view = ClusterView(
             tier_fn=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
             capacity=max(len(dec_meta), 1),
         )
-        self.decode = [
-            DecodeSim(m.instance_id, m.server, cfg.iter_model, cfg.beta_max,
-                      kv_budget, cfg.kv_spec, self.loop, view=self.view)
-            for m in dec_meta
-        ]
-        self._decode_map = {d.instance_id: d for d in self.decode}
+        eng_kw = dict(view=self.view, loop=self.loop, iter_model=cfg.iter_model,
+                      prefill_model=cfg.prefill_model, beta_max=cfg.beta_max,
+                      kv_spec=cfg.kv_spec, kv_budget=kv_budget)
+        if cfg.instance_engine == "reference":
+            self.engine = ReferenceInstanceEngine(pre_meta, dec_meta, **eng_kw)
+        elif cfg.instance_engine == "plane":
+            self.engine = InstancePlane(pre_meta, dec_meta, **eng_kw)
+        else:
+            raise ValueError(f"unknown instance_engine {cfg.instance_engine!r}")
+        self.prefill = self.engine.prefill
+        self.decode = self.engine.decode
         self.oracle = NetworkCostOracle(
             tier_of=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
             tier_bandwidth=self.tree.tier_bandwidth,
             tier_latency=self.tree.tier_latency,
             telemetry_fn=lambda now: self.net.tier_congestion(now),
+            measured_fn=lambda now: self.net.measured_tier_congestion(now),
+            source=cfg.telemetry_source,
             refresh_interval=cfg.oracle_refresh,
         )
         self.inflight = SelfContentionTracker(cap=cfg.inflight_cap)
@@ -157,11 +180,10 @@ class Simulation:
         self._batch_window: list[tuple[RequestState, int]] = []
         self._batch_timer = None
         self._inbound: dict[int, list] = {}   # decode id -> [(rs, transfer)]
-        for p in self.prefill:
-            p.on_done = self._on_prefill_done
-        for d in self.decode:
-            d.on_first_token = lambda rs, now: None
-            d.on_finish = lambda rs, now: None
+        self._epoch: list | None = None       # landing buffer during net fire
+        self.engine.on_prefill_done = self._on_prefill_done
+        self.engine.set_decode_callbacks(lambda rs, now: None,
+                                         lambda rs, now: None)
 
     # ---------------------------------------------------------------- trace
     def load_trace(self, trace: Sequence[Request]) -> None:
@@ -176,12 +198,11 @@ class Simulation:
 
     # ------------------------------------------------------------ prefill side
     def _on_arrival(self, rs: RequestState, now: float) -> None:
-        healthy = [p for p in self.prefill if p.healthy]
-        if not healthy:
+        target = self.engine.pick_prefill(now)
+        if target is None:
             rs.rejected = True
             self.rejected += 1
             return
-        target = min(healthy, key=lambda p: p.eta(now))
         target.submit(rs, now)
 
     def _on_prefill_done(self, rs: RequestState, now: float) -> None:
@@ -195,9 +216,7 @@ class Simulation:
     # ------------------------------------------------------------- scheduling
     def _fill_hits(self, req: Request) -> None:
         """Refresh the per-request hit_tokens scratch column in-place."""
-        hits = self.view.hit_tokens
-        for d in self.decode:
-            hits[d.slot] = float(d.hit_tokens(req))
+        self.engine.fill_hits(req)
 
     def _schedule_one(self, rs: RequestState, now: float) -> None:
         req = rs.req
@@ -234,21 +253,27 @@ class Simulation:
         decisions = self.sched.select_batch(reqs, (self.view, hit_matrix), view,
                                             self.inflight)
         self.decision_latencies.append((_time.perf_counter() - t0) / len(window))
-        for (rs, pid), dec in zip(window, decisions):
-            if dec is None:
-                rs.rejected = True
-                self.rejected += 1
-            else:
-                self._dispatch(rs, dec, now)
+        # Arrival epoch: the whole dispatch burst lands at one timestamp, so
+        # the FlowPlane admits it with a single union rate recompute.
+        self.net.begin_epoch()
+        try:
+            for (rs, pid), dec in zip(window, decisions):
+                if dec is None:
+                    rs.rejected = True
+                    self.rejected += 1
+                else:
+                    self._dispatch(rs, dec, now)
+        finally:
+            self.net.end_epoch()
+        self._reschedule_net(now)
 
     def _dispatch(self, rs: RequestState, decision, now: float) -> None:
         rs.sched_time = now
         rs.decode_instance = decision.instance_id
         rs.tier = decision.tier
         rs.s_eff = decision.s_eff
-        dec = self._decode_by_id(decision.instance_id)
-        rs.hit_tokens = float(dec.hit_tokens(rs.req))
-        dec.reserve(rs, now)
+        rs.hit_tokens = self.engine.hit_tokens(decision.instance_id, rs.req)
+        self.engine.reserve(decision.instance_id, rs, now)
         src = self._server_of[rs.prefill_instance]
         dst = self._server_of[decision.instance_id]
         if decision.s_eff <= 0.0:
@@ -282,7 +307,8 @@ class Simulation:
             if pending["n"] == 0:  # fully resident: latency only
                 lat = self.tree.tier_latency[decision.tier]
                 self.loop.after(lat, lambda t, rs=rs: self._on_transfer_done(rs, None, t))
-            self._reschedule_net(now)
+            if not self.net.in_epoch:
+                self._reschedule_net(now)
             return
         transfer = self.net.start_transfer(
             src, dst, decision.s_eff, now,
@@ -290,10 +316,16 @@ class Simulation:
             n_flows=self.cfg.tp,
         )
         self._inbound.setdefault(decision.instance_id, []).append((rs, transfer))
-        self._reschedule_net(now)
+        if not self.net.in_epoch:
+            self._reschedule_net(now)
 
     # -------------------------------------------------------------- transfers
-    def _on_transfer_done(self, rs: RequestState, transfer, now: float) -> None:
+    def _complete_transfer(self, rs: RequestState, transfer, now: float):
+        """Bookkeeping for one landed transfer.
+
+        Returns the decode instance id to kick, or None when the request
+        bounced (dispatched inside a fault-detection window) and requeued.
+        """
         rs.transfer_end = now
         if transfer is not None:
             lst = self._inbound.get(rs.decode_instance, [])
@@ -306,18 +338,29 @@ class Simulation:
             # write-through: the landed prefix populates the dst pod's store.
             pod = self._server_of[rs.decode_instance][0]
             self.sched.on_transfer_complete(rs.req.block_hashes, 1000 + pod)
-        dec = self._decode_by_id(rs.decode_instance)
-        if not dec.healthy:
+        iid = rs.decode_instance
+        if not self.engine.is_healthy(iid):
             # Dispatched inside the detection window: the landed transfer
             # bounces — release the pin taken at reserve() and requeue.
-            dec.release(rs)
+            self.engine.release(iid, rs)
             self._requeue(rs, now)
+            return None
+        self.engine.enqueue(iid, rs, now)
+        return iid
+
+    def _on_transfer_done(self, rs: RequestState, transfer, now: float) -> None:
+        if self._epoch is not None:
+            # Same-net-instant landing: buffered, admitted as one epoch in
+            # _net_fire (enqueue all, then one kick per touched instance).
+            self._epoch.append((rs, transfer))
             return
-        dec.admit_after_transfer(rs, now)
+        iid = self._complete_transfer(rs, transfer, now)
+        if iid is not None:
+            self.engine.kick((iid,), now)
         self._reschedule_net(now)
 
-    def _decode_by_id(self, iid: int) -> DecodeSim:
-        return self._decode_map[iid]  # O(1): mirrors ClusterView.slot_of
+    def _decode_by_id(self, iid: int):
+        return self.engine.decode_by_id(iid)  # O(1): ClusterView.slot_of
 
     def _reschedule_net(self, now: float) -> None:
         nct = self.net.next_completion_time(now)
@@ -329,7 +372,21 @@ class Simulation:
 
     def _net_fire(self, now: float) -> None:
         self._net_event = None
-        self.net.advance(now)
+        # Buffer every completion this advance pops (the FlowPlane already
+        # batch-pops all flows finishing at one instant), then admit them as
+        # a single InstancePlane epoch.
+        self._epoch = []
+        try:
+            self.net.advance(now)
+        finally:
+            epoch, self._epoch = self._epoch, None
+        touched: list[int] = []
+        for rs, transfer in epoch:
+            iid = self._complete_transfer(rs, transfer, now)
+            if iid is not None and iid not in touched:
+                touched.append(iid)
+        if touched:
+            self.engine.kick(touched, now)
         self._reschedule_net(now)
 
     def _net_tick(self, now: float) -> None:
@@ -341,8 +398,7 @@ class Simulation:
     # ------------------------------------------------------ faults/elasticity
     def _on_fault(self, f: FaultEvent, now: float) -> None:
         if f.kind == "kill_decode":
-            dec = self._decode_by_id(f.instance_id)
-            victims = dec.fail(now)
+            victims = self.engine.fail(f.instance_id, now)
             for rs, transfer in self._inbound.pop(f.instance_id, []):
                 self.net.abort_transfer(transfer, now)
                 if self.sched.uses_self_contention:
@@ -350,12 +406,14 @@ class Simulation:
                 victims.append(rs)
             # Health flips scheduler-visible after the detection delay; until
             # then new dispatches to this instance bounce and requeue.
-            self.loop.after(f.detection_delay, lambda t, d=dec: d.mark_detected(t))
+            self.loop.after(
+                f.detection_delay,
+                lambda t, i=f.instance_id: self.engine.mark_detected(i, t))
             for rs in victims:
                 self._requeue(rs, now)
             self._reschedule_net(now)
         elif f.kind == "slowdown":
-            self._decode_by_id(f.instance_id).iter_scale = f.factor
+            self.engine.set_iter_scale(f.instance_id, f.factor)
         elif f.kind == "add_decode":
             new_id = max(self._server_of) + 1
             # Elastic join: place on the decode-hosting server with the
@@ -368,11 +426,7 @@ class Simulation:
                     pop[d.server] += 1
             srv = min(sorted(pop), key=pop.get)
             self._server_of[new_id] = srv
-            d = DecodeSim(new_id, srv, self.cfg.iter_model, self.cfg.beta_max,
-                          self.cfg.hbm_free_per_gpu * self.cfg.tp,
-                          self.cfg.kv_spec, self.loop, view=self.view)
-            self.decode.append(d)
-            self._decode_map[new_id] = d
+            self.engine.add_decode(new_id, srv)
         else:
             raise ValueError(f.kind)
 
@@ -409,12 +463,14 @@ class Simulation:
         self.load_trace(trace)
         horizon = self.cfg.warmup + self.cfg.measure + drain
         self.loop.run(until=horizon)
+        self.engine.finalize()
         return summarize(
             self.records,
             window=(self.cfg.warmup, self.cfg.warmup + self.cfg.measure),
             scheduler=self.cfg.scheduler,
             decision_latencies=self.decision_latencies,
             rejected=self.rejected,
+            decode_iterations=self.engine.total_iterations,
         )
 
 

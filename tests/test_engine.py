@@ -73,3 +73,24 @@ class TestEmptyCounter:
         loop.run()
         assert len(fired) == 3
         assert loop.empty()
+
+
+class TestNextTime:
+    def test_peek_earliest_live_event(self):
+        loop = EventLoop()
+        assert loop.next_time() is None
+        a = loop.at(3.0, _noop)
+        loop.at(5.0, _noop)
+        assert loop.next_time() == 3.0
+        loop.cancel(a)
+        assert loop.next_time() == 5.0   # cancelled head lazily skipped
+        loop.run()
+        assert loop.next_time() is None
+
+    def test_peek_does_not_consume(self):
+        loop = EventLoop()
+        loop.at(1.0, _noop)
+        assert loop.next_time() == 1.0
+        assert loop.next_time() == 1.0
+        loop.run(until=0.5)
+        assert loop.next_time() == 1.0

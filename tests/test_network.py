@@ -203,3 +203,56 @@ class TestTopology:
         pre, dec = make_instances(tree, tp=4, n_prefill=4, placement="spread")
         tiers = {tree.tier(p.server, d.server) for p in pre for d in dec}
         assert 0 in tiers or 1 in tiers
+
+
+class TestArrivalEpochs:
+    """begin_epoch/end_epoch: a burst of same-instant transfer arrivals
+    admitted with one union dirty-component recompute must end up with
+    bit-identical rates and completion behaviour to per-arrival recomputes
+    (rates depend only on the final flow set; no time passes mid-burst)."""
+
+    def _burst(self, epoch: bool, n=12, seed=3):
+        rng = np.random.default_rng(seed)
+        tree = FatTree()
+        net = FlowNetwork(tree, BackgroundTraffic(0.2), seed=seed)
+        servers = [(p, r, s) for p in range(2) for r in range(2) for s in range(2)]
+        done = []
+        if epoch:
+            net.begin_epoch()
+        for k in range(n):
+            i, j = rng.choice(len(servers), 2, replace=False)
+            net.start_transfer(servers[i], servers[j],
+                               float(rng.uniform(1e7, 5e8)), 0.0,
+                               lambda t, now: done.append((t.transfer_id, now)))
+        if epoch:
+            net.end_epoch()
+        return net, done
+
+    def test_epoch_rates_match_sequential(self):
+        a, _ = self._burst(epoch=True)
+        b, _ = self._burst(epoch=False)
+        fa = {f: (v.rate, v.bytes_remaining, v.path) for f, v in a.flows.items()}
+        fb = {f: (v.rate, v.bytes_remaining, v.path) for f, v in b.flows.items()}
+        assert fa == fb
+
+    def test_epoch_completions_match_sequential(self):
+        a, da = self._burst(epoch=True)
+        b, db = self._burst(epoch=False)
+        now = 0.0
+        for _ in range(10_000):
+            na, nb = a.next_completion_time(now), b.next_completion_time(now)
+            assert na == nb
+            if na is None:
+                break
+            now = na
+            a.advance(now)
+            b.advance(now)
+        assert da == db and len(da) == 12
+
+    def test_nested_epoch_rejected(self):
+        net = FlowNetwork(FatTree(), BackgroundTraffic(0.0), seed=0)
+        net.begin_epoch()
+        with pytest.raises(RuntimeError):
+            net.begin_epoch()
+        net.end_epoch()
+        assert not net.in_epoch

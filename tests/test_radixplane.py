@@ -1,0 +1,185 @@
+"""RadixPlane vs the retired BlockCache on random hash streams.
+
+The array-backed RadixPlane must reproduce the OrderedDict LRU exactly:
+LCP hit-token counts, eviction order, byte accounting and the
+hits/misses/evictions counters, under interleaved insert/touch/evict_to
+with arbitrary ``protected`` levels.  The broadcast ``hit_row`` must agree
+with D independent per-instance walks (including slots past the 64th, which
+exercises multi-word bit packing).
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.sim.kvcache import B_TOK, BlockCache, RadixPlane
+
+BPB = 1e3  # bytes per block
+
+
+def _mk(n_instances=1, budget=1e9):
+    plane = RadixPlane(BPB, block_capacity=64, instance_capacity=2)
+    refs = []
+    for _ in range(n_instances):
+        plane.add_instance(budget)
+        refs.append(BlockCache(budget_bytes=budget, bytes_per_block=BPB))
+    return plane, refs
+
+
+def _assert_same(plane, ref, s, probe_hashes):
+    assert plane.bytes_used(s) == ref.bytes_used
+    assert int(plane.hits[s]) == ref.hits
+    assert int(plane.misses[s]) == ref.misses
+    assert int(plane.evictions[s]) == ref.evictions
+    for h in probe_hashes:
+        assert plane.contains(s, h) == (h in ref)
+    assert plane.lcp_blocks(s, probe_hashes) == ref.lcp_blocks(probe_hashes)
+
+
+def _drive(plane, refs, seed, n_ops=200, pool=60):
+    """Apply one randomized op stream per instance to both structures."""
+    rng = np.random.default_rng(seed)
+    universe = [("h", i) for i in range(pool)]
+    for _ in range(n_ops):
+        s = int(rng.integers(len(refs)))
+        ref = refs[s]
+        op = rng.random()
+        k = int(rng.integers(1, 12))
+        start = int(rng.integers(pool))
+        chain = [universe[(start + j) % pool] for j in range(k)]
+        if op < 0.5:
+            protected = float(rng.uniform(0, 8e3))
+            plane.insert(s, chain, protected=protected)
+            ref.insert(chain, protected=protected)
+        elif op < 0.75:
+            plane.touch(s, chain)
+            ref.touch(chain)
+        else:
+            protected = float(rng.uniform(0, 1.2e9))
+            plane.evict_to(s, protected)
+            ref.evict_to(protected)
+        _assert_same(plane, ref, s, chain)
+        probe = [universe[int(j)] for j in rng.integers(0, pool, 8)]
+        assert plane.hit_tokens(s, probe, input_len=1000) == \
+            ref.hit_tokens(probe, input_len=1000)
+
+
+class TestRandomStreamParity:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_single_instance(self, seed):
+        plane, refs = _mk(1, budget=12e3)  # tight budget: constant eviction
+        _drive(plane, refs, seed)
+
+    @pytest.mark.parametrize("seed", range(2))
+    def test_interleaved_instances(self, seed):
+        """Ops interleave across instances sharing the intern table and
+        presence bitmask; per-instance state must not cross-talk."""
+        plane, refs = _mk(3, budget=9e3)
+        _drive(plane, refs, seed + 100, n_ops=300)
+
+    def test_block_ids_recycled_after_last_holder_evicts(self):
+        """Memory tracks *resident* distinct blocks: once every instance has
+        evicted a block, its dense id (and presence row) is reused, so the
+        intern table does not grow with blocks ever seen."""
+        plane, refs = _mk(2, budget=4e3)  # 4 blocks per instance
+        for i in range(50):
+            chain = [("u", i, j) for j in range(4)]
+            plane.insert(0, chain)
+            plane.insert(1, chain)
+        assert len(plane._intern) == plane.count[0] + len(
+            set(plane._pos[1]) - set(plane._pos[0]))
+        assert len(plane._hash_of) - len(plane._free_bids) == len(plane._intern)
+        # Evicted hashes are gone from the intern table entirely.
+        assert not plane.contains(0, ("u", 0, 0))
+        assert plane.hit_row([("u", 0, 0)], input_len=100).tolist() == [0.0, 0.0]
+        # Fresh inserts after recycling still behave (parity spot check).
+        ref = BlockCache(4e3, BPB)
+        chain = [("v", j) for j in range(4)]
+        plane.insert(0, chain)
+        ref.insert(chain)
+        assert plane.lcp_blocks(0, chain) == ref.lcp_blocks(chain) == 4
+
+    def test_reset_instance_matches_fresh_cache(self):
+        plane, refs = _mk(2, budget=20e3)
+        _drive(plane, refs, 7, n_ops=60)
+        plane.reset_instance(0)
+        refs[0] = BlockCache(budget_bytes=20e3, bytes_per_block=BPB)
+        _drive(plane, refs, 8, n_ops=120)
+
+
+class TestBroadcastHitRow:
+    def test_matches_per_instance_walks_across_words(self):
+        """hit_row against 150 instances (3 uint64 words) == 150 walks."""
+        D, budget = 150, 1e9
+        plane = RadixPlane(BPB, block_capacity=64, instance_capacity=4)
+        refs = [BlockCache(budget, BPB) for _ in range(D)]
+        rng = np.random.default_rng(0)
+        for s in range(D):
+            plane.add_instance(budget)
+            k = int(rng.integers(0, 30))
+            chain = [("c", int(g), j) for g in rng.integers(0, 5, 1) for j in range(k)]
+            plane.insert(s, chain)
+            refs[s].insert(chain)
+        req = [("c", 2, j) for j in range(25)] + [("miss", 0)]
+        row = plane.hit_row(req, input_len=10_000)
+        expect = np.array([r.hit_tokens(req, 10_000) for r in refs], float)
+        np.testing.assert_array_equal(row, expect)
+
+    def test_unknown_prefix_block_caps_every_instance(self):
+        plane, refs = _mk(2)
+        plane.insert(0, [("a", 0), ("a", 1)])
+        row = plane.hit_row([("never", 9), ("a", 0)], input_len=100)
+        assert row.tolist() == [0.0, 0.0]
+
+    def test_out_buffer_reuse(self):
+        plane, refs = _mk(2)
+        plane.insert(1, [("x", 0)])
+        out = np.full(8, -1.0)
+        plane.hit_row([("x", 0)], input_len=100, out=out)
+        assert out[0] == 0.0 and out[1] == B_TOK
+        assert out[2] == -1.0  # untouched past n
+
+
+class TestPropertyBased:
+    """hypothesis property tests (skip cleanly when hypothesis is absent)."""
+
+    @given(st.lists(st.integers(0, 40), min_size=1, max_size=60),
+           st.lists(st.integers(0, 40), min_size=1, max_size=20))
+    @settings(max_examples=60, deadline=None)
+    def test_lcp_hit_tokens_match(self, inserted, query):
+        plane, (ref,) = _mk(1)
+        chain = [("b", i) for i in inserted]
+        plane.insert(0, chain)
+        ref.insert(chain)
+        q = [("b", i) for i in query]
+        assert plane.hit_tokens(0, q, input_len=10_000) == \
+            ref.hit_tokens(q, input_len=10_000)
+        assert plane.hit_tokens(0, q, input_len=5) == \
+            ref.hit_tokens(q, input_len=5)
+
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 30),
+                              st.integers(1, 8)),
+                    min_size=1, max_size=80))
+    @settings(max_examples=60, deadline=None)
+    def test_lru_eviction_order_and_bytes_conservation(self, ops):
+        """Interleaved inserts/touches under a tight budget: eviction order,
+        membership and byte accounting all match the OrderedDict LRU."""
+        budget = 8e3
+        plane, (ref,) = _mk(1, budget=budget)
+        for kind, start, k in ops:
+            chain = [("p", (start + j) % 35) for j in range(k)]
+            if kind == 0:
+                plane.insert(0, chain)
+                ref.insert(chain)
+            elif kind == 1:
+                plane.touch(0, chain)
+                ref.touch(chain)
+            else:
+                plane.evict_to(0, float(start) * 300.0)
+                ref.evict_to(float(start) * 300.0)
+            assert plane.bytes_used(0) == ref.bytes_used
+            assert plane.bytes_used(0) <= budget
+        for i in range(35):
+            assert plane.contains(0, ("p", i)) == (("p", i) in ref)
+        assert int(plane.evictions[0]) == ref.evictions

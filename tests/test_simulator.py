@@ -249,3 +249,99 @@ class TestBatchScheduler:
         m = run_sim(_cfg("netkv-batch"), TRACE)
         assert m.n_unfinished == 0
         assert np.isfinite(m.ttft_mean)
+
+
+class TestKVGrowthAccounting:
+    """Regression: decode-side KV growth (one token per iteration) can push
+    pinned bytes past the budget.  The scheduler-visible free_memory must
+    clamp at zero (no phantom negative capacity) and growth must keep
+    evicting the LRU cache — on both instance engines."""
+
+    def _grow_past_budget(self, engine):
+        from repro.core.cost import B_TOK, H100_TP4_ITER, H100_TP4_PREFILL, \
+            LLAMA3_70B_KV
+        from repro.core.view import ClusterView
+        from repro.sim import EventLoop, InstancePlane, \
+            ReferenceInstanceEngine, RequestState
+
+        class Meta:
+            def __init__(self, iid, srv):
+                self.instance_id, self.server = iid, srv
+
+        kpt = LLAMA3_70B_KV.kv_bytes_per_token
+        req = Request(request_id=0, arrival=0.0, input_len=128, output_len=64,
+                      block_hashes=tuple(("k", i) for i in range(8)),
+                      share_group=-1, slo=5.0)
+        rs = RequestState(req=req, kv_bytes=float(LLAMA3_70B_KV.kv_bytes(128)))
+        # Budget: the pinned prefix plus 3 cache blocks of headroom.  The 8
+        # inserted prefix blocks don't all fit (insert evicts 5), and the 64
+        # output tokens of decode growth (= 4 blocks of bytes) evict the
+        # rest mid-decode and then overcommit the budget outright.
+        budget = rs.kv_bytes + 3 * (kpt * B_TOK)
+        loop = EventLoop()
+        view = ClusterView(capacity=1)
+        cls = InstancePlane if engine == "plane" else ReferenceInstanceEngine
+        eng = cls([], [Meta(0, (0, 0, 0))], view=view, loop=loop,
+                  iter_model=H100_TP4_ITER, prefill_model=H100_TP4_PREFILL,
+                  beta_max=4, kv_spec=LLAMA3_70B_KV, kv_budget=budget)
+        eng.set_decode_callbacks(None, None)
+        eng.reserve(0, rs, 0.0)
+        eng.enqueue(0, rs, 0.0)
+        eng.kick([0], 0.0)
+        min_free = float("inf")
+        while not loop.empty():
+            nt = loop.next_time()
+            loop.run(until=nt)
+            min_free = min(min_free, float(view.free_memory[0]))
+        assert rs.finish > 0
+        stats = eng.cache_stats()[0]
+        return min_free, stats
+
+    @pytest.mark.parametrize("engine", ["plane", "reference"])
+    def test_free_memory_clamped_and_cache_evicted(self, engine):
+        min_free, stats = self._grow_past_budget(engine)
+        assert min_free == 0.0          # overcommitted, but never negative
+        assert stats["evictions"] > 0   # growth evicted the resident blocks
+        assert stats["bytes_used"] == 0.0
+
+    def test_no_negative_free_memory_in_full_run(self):
+        sim = Simulation(_cfg("netkv-full"))
+        sim.run(TRACE)
+        assert (sim.view.free_memory[: sim.view.n] >= 0.0).all()
+
+
+class TestMeasuredTelemetry:
+    """Satellite: oracle source='measured' aggregates FlowPlane link
+    counters instead of reading the background model's ground truth."""
+
+    def test_measured_matches_static_background_when_idle(self):
+        from repro.cluster.network import BackgroundTraffic, FlowPlane
+        from repro.cluster.topology import FatTree
+
+        net = FlowPlane(FatTree(), BackgroundTraffic(0.3), seed=0)
+        m = net.measured_tier_congestion(0.0)
+        truth = net.tier_congestion(0.0)
+        assert m[0] == 0.0  # tier 0 (NVLink) has no fabric links
+        for t in (1, 2, 3):
+            assert m[t] == pytest.approx(truth[t], abs=1e-9)
+
+    def test_measured_sees_own_kv_traffic(self):
+        from repro.cluster.network import BackgroundTraffic, FlowPlane
+        from repro.cluster.topology import FatTree
+
+        net = FlowPlane(FatTree(), BackgroundTraffic(0.2), seed=0)
+        net.start_transfer((0, 0, 0), (1, 1, 1), 1e12, 0.0, lambda t, n: None)
+        with_kv = net.measured_tier_congestion(0.0)
+        without = net.measured_tier_congestion(0.0, include_kv=False)
+        assert with_kv[3] > without[3]  # cross-pod flow shows in the counters
+        for t in (1, 2, 3):
+            assert without[t] == pytest.approx(0.2, abs=1e-9)
+
+    def test_sim_runs_with_measured_source(self):
+        m = run_sim(_cfg("netkv-full", telemetry_source="measured"),
+                    TRACE[: len(TRACE) // 2])
+        assert np.isfinite(m.ttft_mean)
+
+    def test_unknown_source_rejected(self):
+        with pytest.raises(ValueError):
+            Simulation(_cfg("netkv-full", telemetry_source="sflow"))
