@@ -37,6 +37,7 @@ QUICK_SIZES = [64, 1024]    # CI smoke reaches the acceptance size
 BETA = 64                   # full continuous batch per instance
 ROUNDS = 10                 # iteration rounds timed per arm
 SPEEDUP_FLOOR = 10.0        # required plane/reference ratio at 1024
+CHURN_FLOOR = 1.0           # vectorised epoch-batched admission gate at 1024
 
 
 class _Meta:
@@ -151,13 +152,19 @@ def run(quick: bool = False) -> list[dict]:
               f"hit_row {row['hit_row_speedup']:.1f}x")
         rows.append(row)
     write_csv("decode_throughput", rows)
-    # Acceptance gate, enforced wherever the 1024 arm runs (incl. CI smoke).
+    # Acceptance gates, enforced wherever the 1024 arm runs (incl. CI smoke).
     for r in rows:
         if r["decode_instances"] >= 1024:
             assert r["steady_speedup"] >= SPEEDUP_FLOOR, (
                 f"InstancePlane steady speedup {r['steady_speedup']:.1f}x at "
                 f"{r['decode_instances']} instances is below the "
                 f"{SPEEDUP_FLOOR:.0f}x floor")
+            # Vectorised epoch-batched admission: the finish-heavy churn arm
+            # must not be slower than the per-object reference.
+            assert r["churn_speedup"] >= CHURN_FLOOR, (
+                f"InstancePlane churn speedup {r['churn_speedup']:.2f}x at "
+                f"{r['decode_instances']} instances is below the "
+                f"{CHURN_FLOOR:.1f}x admission floor")
     return rows
 
 

@@ -1,52 +1,85 @@
-"""Beyond-paper experiment 9: (a) the TP=8 sparser-pool data point the paper
-leaves open (§VII), (b) multi-hop DRAM staging under decode-cache pressure
-(the Mooncake scenario: per-instance HBM caches thrash, the pod-level DRAM
-store retains hot prefixes)."""
+"""Beyond-paper experiment 9: TopoPlane studies on the dynamic fabric.
+
+Three sweeps over the same rag workload, TTFT/SLO per scheduler:
+
+(a) **NIC-count sweep** — 1/2/4/8 NICs per server (rail-optimised
+    H100-class hosts).  Host egress scales with the NIC count while the
+    per-transfer ceiling stays B_1, so the prefill-side nic_up bottleneck
+    relaxes and the win shifts from "avoid the hot NIC" to "avoid the hot
+    tier".
+(b) **NIC-policy ablation** — hash vs least-loaded vs rail-affine at 4
+    NICs: how much of the multi-NIC win needs a smart rail choice.
+(c) **OCS rewire schedule** — rack->pod uplinks (tiers 2+3) degrade to 25 %
+    capacity mid-trace and are restored later (optical circuit
+    reconfiguration).  The oracle only sees the swap at its next refresh,
+    so schedulers route on pre-rewire bandwidths inside the staleness
+    window — the paper's robustness claim under a capacity stress axis.
+"""
 
 from __future__ import annotations
 
 import time
 
-from repro.sim import SimConfig, run_sim
+from repro.sim import RewireEvent, SimConfig, run_sim
 from repro.sim.metrics import aggregate_seeds
 from repro.traces import generate_trace, profile_capacity
 
 from .common import emit, knobs, write_csv
 
+NIC_SWEEP = [1, 2, 4, 8]
+QUICK_NIC_SWEEP = [1, 4]
+NIC_POLICIES = ["hash", "least-loaded", "rail-affine"]
+SCHEDULERS = ["cla", "netkv-static", "netkv-full"]
+DEGRADE = 0.25   # OCS event: tiers 2+3 drop to a quarter of capacity
+
 
 def run(quick: bool = False) -> list[dict]:
     k = knobs(quick)
+    nic_sweep = QUICK_NIC_SWEEP if quick else NIC_SWEEP
     rows = []
+    cap = profile_capacity("rag")   # one workload profile across all arms
 
-    def point(label, sched, cfg_kw, cap_kw=None, rate=1.0, trace_kw=None):
-        cap = profile_capacity("rag", **(cap_kw or {}))
+    def point(label, sched, cfg_kw, rate=1.0, **tags):
         runs = []
         for seed in range(k["seeds"]):
             trace = generate_trace("rag", duration=k["duration"],
-                                   target_rps=cap * rate, seed=seed,
-                                   **(trace_kw or {}))
+                                   target_rps=cap * rate, seed=seed)
             cfg = SimConfig(scheduler=sched, seed=seed, warmup=k["warmup"],
-                            measure=k["measure"], background=0.2, **cfg_kw)
+                            measure=k["measure"], background=0.25, **cfg_kw)
             runs.append(run_sim(cfg, trace))
         row = aggregate_seeds(runs)
         row["variant"] = label
+        row.update(tags)
         rows.append(row)
         print(f"  exp9 {label}: ttft={row['ttft_mean']*1e3:.0f}ms "
               f"xfer={row['xfer_mean']*1e3:.0f}ms slo={row['slo_attainment']:.3f}")
         return row
 
-    # (a) TP=8: 8 instances (2 prefill + 6 decode) on the same 64 GPUs —
-    # sparser candidate pool, bigger per-instance transfers.
-    for sched in ["cla", "netkv-full"]:
-        point(f"tp8-{sched}", sched,
-              {"tp": 8, "n_prefill": 2, "hbm_free_per_gpu": 45e9},
-              cap_kw={"n_prefill": 2, "n_decode": 6})
-    # (b) decode-cache pressure: small per-instance KV budget thrashes the
-    # local prefix caches; the per-pod DRAM store (multihop) retains them.
-    pressured = {"hbm_free_per_gpu": 12e9}
-    for sched in ["netkv-full", "netkv-multihop"]:
-        point(f"pressure-{sched}", sched, dict(pressured), rate=1.2,
-              trace_kw={"p_share": 0.8, "n_share_groups": 12})
+    # (a) NIC-count sweep: host egress bandwidth scales with the rail count.
+    for nics in nic_sweep:
+        for sched in SCHEDULERS:
+            point(f"nic{nics}-{sched}", sched,
+                  {"nics_per_server": nics, "nic_policy": "hash"},
+                  axis="nic_sweep", nics=nics, nic_policy="hash")
+    # (b) NIC-policy ablation at 4 rails (full mode only).
+    if not quick:
+        for policy in NIC_POLICIES:
+            for sched in SCHEDULERS:
+                point(f"pol-{policy}-{sched}", sched,
+                      {"nics_per_server": 4, "nic_policy": policy},
+                      axis="nic_policy", nics=4, nic_policy=policy)
+    # (c) OCS schedule: degrade rack->pod uplinks a third into the
+    # measurement window, restore two thirds in.
+    t_deg = k["warmup"] + k["measure"] / 3
+    t_res = k["warmup"] + 2 * k["measure"] / 3
+    ocs = [RewireEvent(time=t_deg, scale={2: DEGRADE, 3: DEGRADE}),
+           RewireEvent(time=t_res, scale={2: 1 / DEGRADE, 3: 1 / DEGRADE})]
+    for sched in SCHEDULERS:
+        point(f"ocs-{sched}", sched, {"rewires": ocs},
+              axis="ocs", nics=1, nic_policy="hash", rewired=1)
+        if not quick:  # static-fabric control arm
+            point(f"ocs-control-{sched}", sched, {},
+                  axis="ocs", nics=1, nic_policy="hash", rewired=0)
     write_csv("exp9_extensions", rows)
     return rows
 
@@ -55,11 +88,13 @@ def main(quick: bool = False) -> None:
     t0 = time.time()
     rows = run(quick)
     by = {r["variant"]: r for r in rows}
-    tp8 = (1 - by["tp8-netkv-full"]["ttft_mean"] / by["tp8-cla"]["ttft_mean"]) * 100
-    mh = (1 - by["pressure-netkv-multihop"]["xfer_mean"]
-          / by["pressure-netkv-full"]["xfer_mean"]) * 100
+    hi = max(r["nics"] for r in rows if r.get("axis") == "nic_sweep")
+    nic = (1 - by[f"nic{hi}-netkv-full"]["ttft_mean"]
+           / by["nic1-netkv-full"]["ttft_mean"]) * 100
+    ocs = (1 - by["ocs-netkv-full"]["ttft_mean"]
+           / by["ocs-cla"]["ttft_mean"]) * 100
     emit("exp9_extensions", (time.time() - t0) * 1e6 / max(len(rows), 1),
-         f"tp8_netkv_vs_cla={tp8:.1f}%;multihop_xfer_cut={mh:.1f}%")
+         f"nic{hi}_ttft_cut={nic:.1f}%;ocs_netkv_vs_cla={ocs:.1f}%")
 
 
 if __name__ == "__main__":

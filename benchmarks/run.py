@@ -39,7 +39,7 @@ HARNESSES = {
     "exp6": exp6_ablation,         # Table IV / Fig. 4
     "exp7": exp7_scalability,      # Table V / Fig. 5
     "exp8": exp8_beyond,           # beyond-paper
-    "exp9": exp9_extensions,       # beyond-paper: TP=8 + multihop staging
+    "exp9": exp9_extensions,       # beyond-paper: TopoPlane (multi-NIC + OCS rewire)
     "sched_latency": sched_latency,
     "net_throughput": net_throughput,      # FlowPlane vs reference engine
     "decode_throughput": decode_throughput,  # InstancePlane vs reference

@@ -3,14 +3,30 @@
 ``FlowPlane`` is the production struct-of-arrays engine; ``FlowNetwork`` is
 its backwards-compatible alias.  ``ReferenceFlowNetwork`` (cluster/reference)
 is the retired per-object implementation kept as the bit-exact parity oracle.
+The TopoPlane additions (multi-NIC hosts, NIC-choice policies, OCS capacity
+rewiring) live in ``topology.py``.
 """
 
-from .topology import FatTree, Instance, Link, MAX_PATH_LEN, make_instances
+from .topology import (
+    FatTree,
+    HashNicPolicy,
+    Instance,
+    LeastLoadedNicPolicy,
+    Link,
+    MAX_PATH_LEN,
+    NIC_POLICIES,
+    NicPolicy,
+    RailAffineNicPolicy,
+    make_instances,
+    make_nic_policy,
+)
 from .network import BackgroundTraffic, FlowNetwork, FlowPlane, FlowView, Transfer
 from .reference import Flow, ReferenceFlowNetwork
 
 __all__ = [
     "FatTree", "Instance", "Link", "MAX_PATH_LEN", "make_instances",
+    "NicPolicy", "HashNicPolicy", "LeastLoadedNicPolicy",
+    "RailAffineNicPolicy", "NIC_POLICIES", "make_nic_policy",
     "BackgroundTraffic", "Flow", "FlowNetwork", "FlowPlane", "FlowView",
     "ReferenceFlowNetwork", "Transfer",
 ]

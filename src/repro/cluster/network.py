@@ -42,7 +42,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .topology import FatTree, MAX_PATH_LEN
+from .topology import FatTree, MAX_PATH_LEN, NicPolicy, make_nic_policy
 
 
 class BackgroundTraffic:
@@ -107,10 +107,16 @@ class FlowPlane:
     """Columnar fluid flow simulator over the fat-tree's directed links."""
 
     def __init__(self, tree: FatTree, background: BackgroundTraffic, seed: int = 0,
-                 capacity: int = 64):
+                 capacity: int = 64, nic_policy: "str | NicPolicy" = "hash"):
         self.tree = tree
         self.bg = background
         self.rng = np.random.default_rng(seed)
+        # NIC choice is resolved here, at flow start: the policy sees the
+        # engine's live per-link open-flow counters (least-loaded) or its
+        # own counters (rail-affine), so it must be engine-local — parity
+        # drives resolve one instance per engine from the name.
+        self.nic_policy = make_nic_policy(nic_policy)
+        self.nic_policy.bind(lambda lids: self._link_nflows[lids])
         self._next_flow = 0
         self._next_transfer = 0
         self._last_advance = 0.0
@@ -142,6 +148,10 @@ class FlowPlane:
         # recomputation and accumulates dirty links; end_epoch runs one
         # union recompute (see begin_epoch).
         self._epoch_dirty: list[np.ndarray] | None = None
+        # Per-link open-flow count, maintained incrementally on flow
+        # add/remove (slot [pad] accumulates padding hops; never read).
+        # Feeds the least-loaded NIC policy's argmin.
+        self._link_nflows = np.zeros(tree.n_links + 1, np.int64)
         # ---- residual capacity plane (piecewise-constant bg sampling) ----
         self._resid_caps = np.empty(tree.n_links + 1, np.float64)
         self._sample_background(0.0)
@@ -178,6 +188,9 @@ class FlowPlane:
         del self._slot_order[s]
         self.f_id[s] = -1
         self.f_rate[s] = 0.0
+        # Real links appear at most once per row, so fancy subtraction is
+        # exact for them (the pad slot collects garbage; never read).
+        self._link_nflows[self.f_path[s]] -= 1
         self.f_path[s] = self._pad
         self._free.append(s)
 
@@ -208,8 +221,13 @@ class FlowPlane:
         # One ECMP hash per transfer: TP shard flows share the host pair and
         # take the same uplinks, so the per-transfer uncontested ceiling is
         # exactly B_tau while distinct transfers can still collide.  Same
-        # RNG draw sequence as the reference's flow_path.
-        row, plen = self.tree.path_row(src, dst, self.rng)
+        # RNG draw sequence as the reference's flow_path.  The NIC pair is
+        # resolved here, at flow start, by the engine's NIC policy (tier 0
+        # never crosses a NIC and must not consume policy draws).
+        nics = (0, 0) if tier == 0 else self.nic_policy.pick(
+            self.tree, self.tree.server_index(src), self.tree.server_index(dst),
+            self.rng)
+        row, plen = self.tree.path_row(src, dst, self.rng, nics=nics)
         row = np.where(row < 0, self._pad, row).astype(self._path_dtype)
         slots = []
         for _ in range(n_flows):
@@ -226,6 +244,7 @@ class FlowPlane:
             t.flows_open += 1
         self._transfers[t.transfer_id] = t
         self._tslots[t.transfer_id] = slots
+        self._link_nflows[row] += n_flows
         if self._epoch_dirty is not None:
             self._epoch_dirty.append(row[:plen])
         else:
@@ -332,6 +351,20 @@ class FlowPlane:
         self._sample_background(now)
         if self._slot_order:
             self._recompute_rates(dirty_links=None)
+
+    def on_rewire(self, now: float) -> None:
+        """Topology capacities changed (``FatTree.rewire``): re-water-fill.
+
+        Bytes drain at the old rates up to ``now`` (the reconfiguration
+        instant), then the residual-capacity plane is rebuilt from the new
+        ``link_capacity`` table and every in-flight flow is re-water-filled
+        in one full pass — the swap moves capacity under *all* components at
+        once, so no flow may keep a rate assigned against the old
+        capacities (it could silently sit over the new ones).
+        """
+        if self._epoch_dirty is not None:
+            raise RuntimeError("cannot rewire inside an open arrival epoch")
+        self.refresh_rates(now)
 
     # -------------------------------------------------------- water-filling
     def _recompute_rates(self, dirty_links: np.ndarray | None = None) -> None:

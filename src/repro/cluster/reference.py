@@ -20,7 +20,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .topology import FatTree
+from .topology import FatTree, NicPolicy, make_nic_policy
 
 
 @dataclasses.dataclass
@@ -33,12 +33,24 @@ class Flow:
 
 
 class ReferenceFlowNetwork:
-    """Fluid flow simulator over the fat-tree's directed links (per-object)."""
+    """Fluid flow simulator over the fat-tree's directed links (per-object).
 
-    def __init__(self, tree: FatTree, background, seed: int = 0):
+    Multi-NIC topologies and capacity rewires are supported the per-object
+    way: the NIC policy is resolved per transfer through the same
+    ``NicPolicy`` protocol (engine-local instance, identical call order =
+    identical RNG stream), and ``_recompute_rates`` reads link capacities
+    live from ``tree.links``, so a ``FatTree.rewire`` takes effect at the
+    next ``refresh_rates`` call — the rewire-time hook mirroring
+    ``FlowPlane.on_rewire``.
+    """
+
+    def __init__(self, tree: FatTree, background, seed: int = 0,
+                 nic_policy: "str | NicPolicy" = "hash"):
         self.tree = tree
         self.bg = background
         self.rng = np.random.default_rng(seed)
+        self.nic_policy = make_nic_policy(nic_policy)
+        self.nic_policy.bind(self._nic_load)
         self.flows: dict[int, Flow] = {}
         self._next_flow = 0
         self._next_transfer = 0
@@ -46,6 +58,14 @@ class ReferenceFlowNetwork:
         self.completed_transfers = 0
         self.bytes_delivered = 0.0
         self._tier_bytes = {0: 0.0, 1: 0.0, 2: 0.0, 3: 0.0}
+
+    def _nic_load(self, lids) -> np.ndarray:
+        """Open-flow count per candidate NIC link (least-loaded policy)."""
+        cnt: dict[int, int] = {}
+        for f in self.flows.values():
+            for l in f.path:
+                cnt[l] = cnt.get(l, 0) + 1
+        return np.array([cnt.get(int(l), 0) for l in lids], np.int64)
 
     # ------------------------------------------------------------------ API
     def start_transfer(
@@ -75,8 +95,12 @@ class ReferenceFlowNetwork:
         per_flow = total_bytes / n_flows
         # One ECMP hash per transfer: TP shard flows share the host pair and
         # take the same uplinks, so the per-transfer uncontested ceiling is
-        # exactly B_tau while distinct transfers can still collide.
-        path = tuple(self.tree.flow_path(src, dst, self.rng))
+        # exactly B_tau while distinct transfers can still collide.  NIC
+        # pair resolved at flow start, same policy call order as the plane.
+        nics = (0, 0) if tier == 0 else self.nic_policy.pick(
+            self.tree, self.tree.server_index(src), self.tree.server_index(dst),
+            self.rng)
+        path = tuple(self.tree.flow_path(src, dst, self.rng, nics=nics))
         for _ in range(n_flows):
             f = Flow(self._next_flow, t, path, per_flow)
             self._next_flow += 1

@@ -1,4 +1,4 @@
-"""Multi-tier fat-tree cluster topology (§III-A, §VI-A).
+"""Multi-tier fat-tree cluster topology (§III-A, §VI-A) — the TopoPlane.
 
 The evaluation cluster: 2 pods x 2 racks x 2 servers x 8 GPUs = 64 GPUs.
 Locality tiers:
@@ -11,12 +11,31 @@ Locality tiers:
 Directed links are materialised for the flow-level simulator; ECMP gives
 each ToR/agg ``n_uplinks`` parallel uplinks chosen uniformly at random per
 flow (so correlated flows can collide below capacity, §VI-B).
+
+The link structure itself is a first-class, time-varying simulation object:
+
+* **Multi-NIC hosts** — ``nics_per_server`` materialises N nic_up/nic_down
+  pairs per server (rail-optimised H100-class hosts carry 4-8), each at the
+  full tier-1 bandwidth class, so host egress scales with the NIC count
+  while the per-transfer uncontested ceiling stays B_1.  Which NIC a
+  transfer rides is a pluggable :class:`NicPolicy` (``hash`` /
+  ``least-loaded`` / ``rail-affine``) resolved at flow start by the network
+  engine.  ``nics_per_server=1`` reproduces the single-NIC link table (same
+  link ids, same ECMP RNG stream) bit-for-bit.
+* **Capacity timeline** — :meth:`FatTree.rewire` atomically swaps tier
+  capacities mid-run (an OCS reconfiguration event).  Both the columnar
+  link table (``link_capacity``) and the per-object ``Link`` records are
+  rebuilt so the FlowPlane and the reference engine observe the same swap;
+  callers holding in-flight flows must follow with a full rate recompute
+  (``FlowPlane.on_rewire`` / ``ReferenceFlowNetwork.refresh_rates``) so no
+  flow is silently left over the new capacity.  ``topo_epoch`` counts
+  rewires for staleness bookkeeping.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterator, Mapping
 
 import numpy as np
 
@@ -24,6 +43,101 @@ from repro.core.oracle import PAPER_TIER_BANDWIDTH, PAPER_TIER_LATENCY
 
 # Longest possible path: nic_up, tor_up, agg_up, agg_down, tor_down, nic_down.
 MAX_PATH_LEN = 6
+
+
+# -- NIC-choice policies -----------------------------------------------------
+class NicPolicy:
+    """Picks the (src_nic, dst_nic) pair for one transfer at flow start.
+
+    The policy is owned by a network engine instance (FlowPlane or the
+    reference); engines drive it in identical call order, so two engines
+    with their *own* policy instances stay bit-exact under a shared seed.
+    With one NIC per server every policy returns ``(0, 0)`` without
+    consuming RNG draws — the single-NIC stream is untouched.
+    """
+
+    name = "base"
+
+    def bind(self, load_fn) -> None:
+        """Attach an engine-side ``load_fn(link_ids) -> open-flow counts``."""
+        self._load_fn = load_fn
+
+    def pick(self, tree: "FatTree", si: int, di: int, rng) -> tuple[int, int]:
+        raise NotImplementedError
+
+
+class HashNicPolicy(NicPolicy):
+    """Per-transfer uniform hash, the multi-rail analogue of ECMP (§VI-B):
+    one independent draw per endpoint, so correlated transfers can collide
+    on a NIC below aggregate host capacity."""
+
+    name = "hash"
+
+    def pick(self, tree, si, di, rng):
+        n = tree.nics_per_server
+        if n == 1:
+            return 0, 0
+        return int(rng.integers(n)), int(rng.integers(n))
+
+
+class LeastLoadedNicPolicy(NicPolicy):
+    """argmin open-flow count over each endpoint's NICs (ties -> lowest
+    NIC index), the QP-count rail selection real multi-rail RDMA stacks
+    apply.  Needs the engine's ``bind``-ed load counters."""
+
+    name = "least-loaded"
+    _load_fn = None
+
+    def pick(self, tree, si, di, rng):
+        n = tree.nics_per_server
+        if n == 1 or self._load_fn is None:
+            return 0, 0
+        up = self._load_fn(tree._srv_nic_up[si])
+        down = self._load_fn(tree._srv_nic_down[di])
+        return int(np.argmin(up)), int(np.argmin(down))
+
+
+class RailAffineNicPolicy(NicPolicy):
+    """Rail-optimised placement: src and dst use the *same* rail index
+    (NIC i talks to NIC i through the rail's dedicated fabric), rails
+    assigned round-robin across transfer starts."""
+
+    name = "rail-affine"
+
+    def __init__(self) -> None:
+        self._turn = 0
+
+    def pick(self, tree, si, di, rng):
+        n = tree.nics_per_server
+        if n == 1:
+            return 0, 0
+        rail = self._turn % n
+        self._turn += 1
+        return rail, rail
+
+
+NIC_POLICIES = {
+    "hash": HashNicPolicy,
+    "least-loaded": LeastLoadedNicPolicy,
+    "rail-affine": RailAffineNicPolicy,
+}
+
+
+def make_nic_policy(policy: "str | NicPolicy") -> NicPolicy:
+    """Resolve a policy name (or pass through an instance).
+
+    Engines that must stay mutually bit-exact (plane vs reference) should
+    each resolve their own instance from the name — rail-affine carries a
+    round-robin counter, least-loaded binds engine-local load counters.
+    """
+    if isinstance(policy, NicPolicy):
+        return policy
+    try:
+        return NIC_POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown NIC policy {policy!r}; known: {sorted(NIC_POLICIES)}"
+        ) from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +177,7 @@ class FatTree:
         tier_latency: dict[int, float] | None = None,
         n_tor_uplinks: int = 8,
         n_agg_uplinks: int = 8,
+        nics_per_server: int = 1,
     ) -> None:
         self.n_pods = n_pods
         self.racks_per_pod = racks_per_pod
@@ -72,14 +187,18 @@ class FatTree:
         self.tier_latency = dict(tier_latency or PAPER_TIER_LATENCY)
         self.n_tor_uplinks = n_tor_uplinks
         self.n_agg_uplinks = n_agg_uplinks
+        if nics_per_server < 1:
+            raise ValueError("nics_per_server must be >= 1")
+        self.nics_per_server = int(nics_per_server)
+        self.topo_epoch = 0   # rewire generation counter
 
         self.n_gpus = n_pods * racks_per_pod * servers_per_rack * gpus_per_server
         self._coords = [self._coord_of(g) for g in range(self.n_gpus)]
 
         # --- materialise directed links -----------------------------------
         self.links: list[Link] = []
-        self._nic_up: dict[tuple[int, int, int], int] = {}
-        self._nic_down: dict[tuple[int, int, int], int] = {}
+        self._nic_up: dict[tuple[int, int, int], list[int]] = {}
+        self._nic_down: dict[tuple[int, int, int], list[int]] = {}
         self._nvlink: dict[tuple[int, int, int], int] = {}
         self._tor_up: dict[tuple[int, int], list[int]] = {}
         self._tor_down: dict[tuple[int, int], list[int]] = {}
@@ -96,13 +215,18 @@ class FatTree:
             self.links.append(Link(lid, kind, tier, self.tier_bandwidth[tier]))
             return lid
 
+        # NIC link ids are contiguous per direction (all ups, then all downs)
+        # so that nics_per_server=1 reproduces the historical per-server
+        # nvlink, nic_up, nic_down id sequence exactly.
         for p in range(n_pods):
             for r in range(racks_per_pod):
                 for s in range(servers_per_rack):
                     key = (p, r, s)
                     self._nvlink[key] = add("nvlink", 0)
-                    self._nic_up[key] = add("nic_up", 1)
-                    self._nic_down[key] = add("nic_down", 1)
+                    self._nic_up[key] = [
+                        add("nic_up", 1) for _ in range(self.nics_per_server)]
+                    self._nic_down[key] = [
+                        add("nic_down", 1) for _ in range(self.nics_per_server)]
                 rack = (p, r)
                 self._tor_up[rack] = [add("tor_up", 2) for _ in range(n_tor_uplinks)]
                 self._tor_down[rack] = [add("tor_down", 2) for _ in range(n_tor_uplinks)]
@@ -120,8 +244,10 @@ class FatTree:
         self.n_servers = n_pods * racks_per_pod * servers_per_rack
         n_racks = n_pods * racks_per_pod
         self._srv_nvlink = np.zeros(self.n_servers, np.int32)
-        self._srv_nic_up = np.zeros(self.n_servers, np.int32)
-        self._srv_nic_down = np.zeros(self.n_servers, np.int32)
+        # NIC tables carry a per-server NIC axis; column 0 is the historical
+        # single-NIC link for every server.
+        self._srv_nic_up = np.zeros((self.n_servers, self.nics_per_server), np.int32)
+        self._srv_nic_down = np.zeros((self.n_servers, self.nics_per_server), np.int32)
         self._rack_tor_up = np.zeros((n_racks, n_tor_uplinks), np.int32)
         self._rack_tor_down = np.zeros((n_racks, n_tor_uplinks), np.int32)
         self._pod_agg_up = np.zeros((n_pods, n_agg_uplinks), np.int32)
@@ -186,16 +312,54 @@ class FatTree:
         t[src_idx == dst_idx] = 0
         return t
 
+    # -- capacity timeline (OCS rewiring) ------------------------------------
+    def rewire(
+        self,
+        tier_bandwidth: Mapping[int, float] | None = None,
+        scale: Mapping[int, float] | None = None,
+    ) -> int:
+        """Atomically swap tier capacities mid-run (OCS reconfiguration).
+
+        ``tier_bandwidth`` sets absolute per-tier bytes/s; ``scale``
+        multiplies the current values (both may be partial maps).  Every
+        link of a touched tier gets the new capacity in the same call —
+        both the columnar ``link_capacity`` table (FlowPlane substrate) and
+        the per-object ``Link`` records (reference engine substrate), so
+        the two network engines observe one consistent swap.  The caller
+        owning in-flight flows must follow with a full rate recompute
+        (``FlowPlane.on_rewire`` / ``ReferenceFlowNetwork.refresh_rates``):
+        rates assigned under the old capacities are not feasible under the
+        new ones.  Returns the new ``topo_epoch``.
+        """
+        if tier_bandwidth:
+            for t, b in tier_bandwidth.items():
+                if int(t) not in self.tier_bandwidth:
+                    raise KeyError(f"unknown tier {t}")
+                self.tier_bandwidth[int(t)] = float(b)
+        if scale:
+            for t, f in scale.items():
+                self.tier_bandwidth[int(t)] = self.tier_bandwidth[int(t)] * float(f)
+        caps = np.array([self.tier_bandwidth[t] for t in range(4)], np.float64)
+        self.link_capacity = caps[self.link_tier]
+        self.links = [
+            dataclasses.replace(l, capacity=float(self.link_capacity[l.link_id]))
+            for l in self.links
+        ]
+        self.topo_epoch += 1
+        return self.topo_epoch
+
     # -- paths (ECMP) ---------------------------------------------------------
     def path_row(
         self, src: tuple[int, int, int], dst: tuple[int, int, int], rng,
-        out: np.ndarray | None = None,
+        out: np.ndarray | None = None, nics: tuple[int, int] = (0, 0),
     ) -> tuple[np.ndarray, int]:
         """Fixed-width link-id row (padded with -1) + path length.
 
         Same ECMP model and — critically — the *same RNG draw sequence* as
         ``flow_path``, so the columnar FlowPlane and the per-object reference
-        pick identical uplinks under a shared seed.
+        pick identical uplinks under a shared seed.  ``nics`` selects the
+        (src, dst) NIC pair; the engines resolve it through their
+        :class:`NicPolicy` before building the path.
         """
         if out is None:
             out = np.full(MAX_PATH_LEN, -1, np.int32)
@@ -204,7 +368,7 @@ class FatTree:
         if t == 0:
             out[0] = self._srv_nvlink[si]
             return out, 1
-        out[0] = self._srv_nic_up[si]
+        out[0] = self._srv_nic_up[si, nics[0]]
         k = 1
         if t >= 2:
             out[k] = self._rack_tor_up[si // self.servers_per_rack][
@@ -218,11 +382,12 @@ class FatTree:
             out[k] = self._rack_tor_down[di // self.servers_per_rack][
                 rng.integers(self.n_tor_uplinks)]
             k += 1
-        out[k] = self._srv_nic_down[di]
+        out[k] = self._srv_nic_down[di, nics[1]]
         return out, k + 1
 
     def flow_path(
-        self, src: tuple[int, int, int], dst: tuple[int, int, int], rng
+        self, src: tuple[int, int, int], dst: tuple[int, int, int], rng,
+        nics: tuple[int, int] = (0, 0),
     ) -> list[int]:
         """Directed link ids traversed by one flow src-server -> dst-server.
 
@@ -230,7 +395,7 @@ class FatTree:
         (tor_up/agg_up on the source side, agg_down/tor_down on the
         destination side), per §VI-B.
         """
-        row, k = self.path_row(src, dst, rng)
+        row, k = self.path_row(src, dst, rng, nics=nics)
         return [int(l) for l in row[:k]]
 
     def base_latency(self, src, dst) -> float:

@@ -89,6 +89,16 @@ class NetworkCostOracle:
       subtract the KV DSCP class).  This opens a realistic telemetry-noise
       axis for the staleness experiments
       (``FlowPlane.measured_tier_congestion``).
+
+    **Rewire awareness**: the "static" per-tier maps are held as *live*
+    references (pass ``topology=`` or the topology's own dicts) and
+    snapshotted into the immutable ``OracleView`` at each refresh.  An OCS
+    rewire (``FatTree.rewire``) therefore reaches the scheduler only at the
+    *next* refresh — between a rewire and that refresh the scheduler routes
+    on pre-rewire bandwidths, which is exactly the staleness regime of
+    Prop. 2 extended to the capacity axis.  The previous construction-time
+    ``dict()`` copy drifted silently from any topology whose capacities
+    changed (or whose caller mutated its ``tier_bandwidth`` after build).
     """
 
     def __init__(
@@ -100,14 +110,26 @@ class NetworkCostOracle:
         refresh_interval: float = 1.0,
         measured_fn: Callable[[float], Mapping[int, float]] | None = None,
         source: str = "model",
+        topology=None,
     ) -> None:
         if source not in ("model", "measured"):
             raise ValueError(f"unknown telemetry source {source!r}")
         if source == "measured" and measured_fn is None:
             raise ValueError("source='measured' requires measured_fn")
         self.tier_of = tier_of
-        self.tier_bandwidth = dict(tier_bandwidth or PAPER_TIER_BANDWIDTH)
-        self.tier_latency = dict(tier_latency or PAPER_TIER_LATENCY)
+        if topology is not None:
+            # Wire the static maps straight to the live topology dicts.
+            tier_bandwidth = tier_bandwidth if tier_bandwidth is not None \
+                else topology.tier_bandwidth
+            tier_latency = tier_latency if tier_latency is not None \
+                else topology.tier_latency
+        # Live references, NOT copies: a rewire mutates these in place and
+        # the next refresh snapshots the new values.  The paper defaults are
+        # copied so nobody can corrupt the module constants through us.
+        self.tier_bandwidth = tier_bandwidth if tier_bandwidth is not None \
+            else dict(PAPER_TIER_BANDWIDTH)
+        self.tier_latency = tier_latency if tier_latency is not None \
+            else dict(PAPER_TIER_LATENCY)
         self._telemetry_fn = telemetry_fn or (lambda now: {t: 0.0 for t in TIERS})
         self._measured_fn = measured_fn
         self.source = source
@@ -126,8 +148,10 @@ class NetworkCostOracle:
                 congestion.setdefault(t, 0.0)
             self._snapshot = OracleView(
                 tier_of=self.tier_of,
-                tier_bandwidth=self.tier_bandwidth,
-                tier_latency=self.tier_latency,
+                # Immutable copies: the snapshot must hold the pre-rewire
+                # values until the next refresh, not track the live dicts.
+                tier_bandwidth=dict(self.tier_bandwidth),
+                tier_latency=dict(self.tier_latency),
                 congestion=congestion,
                 timestamp=now,
             )

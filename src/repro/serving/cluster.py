@@ -76,8 +76,7 @@ class DisaggregatedCluster:
         self.iter_model = IterTimeModel(a=0.0124, b=1.6e-5)
         self.oracle = NetworkCostOracle(
             tier_of=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
-            tier_bandwidth=self.tree.tier_bandwidth,
-            tier_latency=self.tree.tier_latency,
+            topology=self.tree,
             telemetry_fn=lambda now: self.net.tier_congestion(now),
         )
         self.inflight = SelfContentionTracker()

@@ -5,12 +5,12 @@ from .kvcache import B_TOK, BlockCache, RadixPlane, n_blocks
 from .instances import DecodeHandle, InstancePlane, PrefillHandle, RequestState
 from .reference import DecodeSim, PrefillSim, ReferenceInstanceEngine
 from .metrics import RunMetrics, aggregate_seeds, summarize
-from .simulator import FaultEvent, SimConfig, Simulation, run_sim
+from .simulator import FaultEvent, RewireEvent, SimConfig, Simulation, run_sim
 
 __all__ = [
     "EventLoop", "B_TOK", "BlockCache", "RadixPlane", "n_blocks",
     "InstancePlane", "DecodeHandle", "PrefillHandle",
     "DecodeSim", "PrefillSim", "ReferenceInstanceEngine",
     "RequestState", "RunMetrics", "aggregate_seeds", "summarize",
-    "FaultEvent", "SimConfig", "Simulation", "run_sim",
+    "FaultEvent", "RewireEvent", "SimConfig", "Simulation", "run_sim",
 ]

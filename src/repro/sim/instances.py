@@ -494,33 +494,42 @@ class InstancePlane:
         if active == 0 and not q:
             return
         if q and active < self.beta_max:
-            # Admit from the queue at the iteration boundary (Orca-style).
-            # Reserve table rows up front: growth reallocates the columns,
-            # which would orphan the locals hoisted below.
-            self._reserve_rows(min(len(q), self.beta_max - active))
-            iter_model = self.iter_model
-            scale = float(self.d_iter_scale[s])
-            r_live, r_tokens = self.r_live, self.r_tokens
-            r_out, r_inst, r_seq = self.r_out, self.r_inst, self.r_seq
-            r_obj = self.r_obj
-            inst_rows = self._inst_rows[s]
+            # Admit from the queue at the iteration boundary (Orca-style),
+            # the whole kick-epoch cohort in one vectorised batch: row
+            # allocation is a single free-list slice (same pop order as
+            # repeated _alloc_row), the table columns are fancy-index
+            # writes, and the per-request TBT-at-entry values — t_iter of
+            # the batch size each request joins — come out of one
+            # iter_time_vector call (element-for-element the IEEE op
+            # sequence of the scalar iter_model, so rs.tbt stays
+            # bit-identical to the reference's per-request computation).
+            k = min(len(q), self.beta_max - active)
+            self._reserve_rows(k)
+            free = self._r_free
+            rows = free[-k:][::-1]           # == k successive .pop()s
+            del free[-k:]
+            self._r_hi = max(self._r_hi, max(rows) + 1)
+            admitted = [q.popleft() for _ in range(k)]
+            idx = np.array(rows, np.intp)
+            self.r_live[idx] = True
+            self.r_tokens[idx] = 0
+            self.r_out[idx] = [rs.req.output_len for rs in admitted]
+            self.r_inst[idx] = s
             seq = self._next_seq
-            while q and active < self.beta_max:
-                rs = q.popleft()
+            self.r_seq[idx] = np.arange(seq, seq + k)
+            self._next_seq = seq + k
+            scale = float(self.d_iter_scale[s])
+            # §VI-A: TBT at entry — batch sizes active+1 .. active+k.
+            tbts = (iter_time_vector(self.iter_model,
+                                     np.arange(active + 1, active + k + 1))
+                    * scale).tolist()
+            r_obj = self.r_obj
+            for r, rs, tbt in zip(rows, admitted, tbts):
                 rs.admit_time = now
-                # §VI-A: TBT at entry — batch size the request joins.
-                rs.tbt = iter_model(active + 1) * scale
-                r = self._alloc_row()
-                r_live[r] = True
-                r_tokens[r] = 0
-                r_out[r] = rs.req.output_len
-                r_inst[r] = s
-                r_seq[r] = seq
-                seq += 1
+                rs.tbt = tbt
                 r_obj[r] = rs
-                inst_rows.append(r)
-                active += 1
-            self._next_seq = seq
+            self._inst_rows[s].extend(rows)
+            active += k
             self.d_qlen[s] = len(q)
             self.d_active[s] = active
         if active == 0:

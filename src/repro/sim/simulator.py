@@ -66,6 +66,22 @@ class FaultEvent:
 
 
 @dataclasses.dataclass
+class RewireEvent:
+    """Scheduled OCS reconfiguration: swap tier capacities at ``time``.
+
+    ``tier_bandwidth`` sets absolute per-tier bytes/s; ``scale`` multiplies
+    the current values (both partial maps; ``scale`` applies after).  The
+    swap is atomic at ``time``: the FlowPlane re-water-fills every in-flight
+    flow immediately, while the scheduler keeps routing on the oracle's
+    pre-rewire snapshot until the next oracle refresh.
+    """
+
+    time: float
+    tier_bandwidth: dict | None = None
+    scale: dict | None = None
+
+
+@dataclasses.dataclass
 class SimConfig:
     scheduler: str = "netkv-full"
     scheduler_kwargs: dict = dataclasses.field(default_factory=dict)
@@ -78,6 +94,8 @@ class SimConfig:
     tier_latency: dict | None = None
     n_tor_uplinks: int = 8
     n_agg_uplinks: int = 8
+    nics_per_server: int = 1
+    nic_policy: str = "hash"                # "hash" | "least-loaded" | "rail-affine"
     # instances
     tp: int = 4
     n_prefill: int = 4
@@ -98,8 +116,9 @@ class SimConfig:
     warmup: float = 5.0
     measure: float = 15.0
     seed: int = 0
-    # faults / elasticity
+    # faults / elasticity / topology dynamics
     faults: Sequence[FaultEvent] = ()
+    rewires: Sequence[RewireEvent] = ()     # OCS capacity timeline
     net_tick: float = 0.1                   # rate refresh for wandering bg
     staging_capacity: float = 512e9         # per-pod DRAM KV store (multihop)
 
@@ -112,12 +131,14 @@ class Simulation:
             cfg.n_pods, cfg.racks_per_pod, cfg.servers_per_rack, cfg.gpus_per_server,
             tier_bandwidth=cfg.tier_bandwidth, tier_latency=cfg.tier_latency,
             n_tor_uplinks=cfg.n_tor_uplinks, n_agg_uplinks=cfg.n_agg_uplinks,
+            nics_per_server=cfg.nics_per_server,
         )
         bg = cfg.background
         self.bg = bg if isinstance(bg, BackgroundTraffic) else BackgroundTraffic(
             bg, wander=cfg.bg_wander, seed=cfg.seed
         )
-        self.net = FlowPlane(self.tree, self.bg, seed=cfg.seed)
+        self.net = FlowPlane(self.tree, self.bg, seed=cfg.seed,
+                             nic_policy=cfg.nic_policy)
         pre_meta, dec_meta = make_instances(self.tree, tp=cfg.tp, n_prefill=cfg.n_prefill)
         kv_budget = cfg.hbm_free_per_gpu * cfg.tp
         self._server_of = {
@@ -140,10 +161,11 @@ class Simulation:
             raise ValueError(f"unknown instance_engine {cfg.instance_engine!r}")
         self.prefill = self.engine.prefill
         self.decode = self.engine.decode
+        # topology= wires the static B_tau/L_tau maps to the live tree, so
+        # rewires surface at the next oracle refresh (not before).
         self.oracle = NetworkCostOracle(
             tier_of=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
-            tier_bandwidth=self.tree.tier_bandwidth,
-            tier_latency=self.tree.tier_latency,
+            topology=self.tree,
             telemetry_fn=lambda now: self.net.tier_congestion(now),
             measured_fn=lambda now: self.net.measured_tier_congestion(now),
             source=cfg.telemetry_source,
@@ -193,6 +215,8 @@ class Simulation:
             self.loop.at(req.arrival, lambda now, rs=rs: self._on_arrival(rs, now))
         for f in self.cfg.faults:
             self.loop.at(f.time, lambda now, f=f: self._on_fault(f, now))
+        for rw in self.cfg.rewires:
+            self.loop.at(rw.time, lambda now, rw=rw: self._on_rewire(rw, now))
         if self.cfg.net_tick > 0:
             self.loop.after(self.cfg.net_tick, self._net_tick)
 
@@ -394,6 +418,16 @@ class Simulation:
         self._reschedule_net(now)
         if not self.loop.empty():
             self.loop.after(self.cfg.net_tick, self._net_tick)
+
+    # ------------------------------------------------------ topology dynamics
+    def _on_rewire(self, rw: RewireEvent, now: float) -> None:
+        """OCS reconfiguration fires: swap capacities, re-water-fill, and
+        re-arm the completion timer (every in-flight ETA just moved).  The
+        oracle is *not* poked — the scheduler keeps its stale pre-rewire
+        snapshot until the next refresh interval elapses."""
+        self.tree.rewire(tier_bandwidth=rw.tier_bandwidth, scale=rw.scale)
+        self.net.on_rewire(now)
+        self._reschedule_net(now)
 
     # ------------------------------------------------------ faults/elasticity
     def _on_fault(self, f: FaultEvent, now: float) -> None:

@@ -1,0 +1,512 @@
+"""TopoPlane: multi-NIC hosts, NIC-choice policies, OCS capacity rewiring.
+
+Four concerns, mirroring the other planes' test layout:
+
+* **Topology** — the per-server NIC axis materialises N nic_up/nic_down
+  pairs per server at full tier-1 capacity each, and ``nics_per_server=1``
+  reproduces the historical single-NIC link table (same ids, same RNG
+  stream — the existing parity suites run unmodified on top of this).
+* **Policies** — hash spreads, least-loaded avoids occupied rails (with the
+  analytic consequence: N disjoint-rail transfers each attain full B_1),
+  rail-affine round-robins with src/dst rail alignment.
+* **Rewire** — ``FatTree.rewire`` swaps tier capacities atomically in both
+  link tables; ``FlowPlane.on_rewire`` re-water-fills in-flight flows so no
+  flow is ever left over the new capacity; byte conservation and max-min
+  feasibility hold across mid-flight rewires (property tests); and the
+  FlowPlane stays bit-exact with ``ReferenceFlowNetwork`` across rewires
+  and multi-NIC policies.
+* **Oracle** — the static B_tau map snapshots from the *live* topology
+  (regression: a non-paper tree must never report paper constants), and a
+  rewire reaches the scheduler only at the next refresh (staleness).
+"""
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.cluster import (
+    BackgroundTraffic,
+    FatTree,
+    FlowPlane,
+    ReferenceFlowNetwork,
+    make_nic_policy,
+)
+from repro.core.oracle import NetworkCostOracle, PAPER_TIER_BANDWIDTH, TIERS
+
+B1 = PAPER_TIER_BANDWIDTH[1]
+
+
+def _servers(tree):
+    return [
+        (p, r, s)
+        for p in range(tree.n_pods)
+        for r in range(tree.racks_per_pod)
+        for s in range(tree.servers_per_rack)
+    ]
+
+
+def _drain(net, now=0.0, until=1e9):
+    while True:
+        nxt = net.next_completion_time(now)
+        if nxt is None or nxt > until:
+            return now
+        now = nxt
+        net.advance(now)
+
+
+# ---------------------------------------------------------------- topology
+class TestMultiNicTopology:
+    def test_link_counts_and_capacity(self):
+        tree = FatTree(nics_per_server=4)
+        for srv in _servers(tree):
+            assert len(tree._nic_up[srv]) == 4
+            assert len(tree._nic_down[srv]) == 4
+            for lid in (*tree._nic_up[srv], *tree._nic_down[srv]):
+                assert tree.links[lid].tier == 1
+                assert tree.links[lid].capacity == B1
+        # 1 nvlink + 4 up + 4 down per server, plus ToR/agg uplink groups.
+        n_srv = tree.n_servers
+        n_racks = tree.n_pods * tree.racks_per_pod
+        assert tree.n_links == n_srv * 9 + n_racks * 16 + tree.n_pods * 16
+
+    def test_single_nic_table_is_historical(self):
+        """nics_per_server=1 keeps the per-server nvlink/nic_up/nic_down
+        link-id triple sequence — ids 3k, 3k+1, 3k+2 within the server
+        block — so pre-NIC path rows are reproduced exactly."""
+        tree = FatTree(nics_per_server=1)
+        for si, srv in enumerate(_servers(tree)):
+            assert tree._srv_nic_up[si, 0] == tree._srv_nvlink[si] + 1
+            assert tree._srv_nic_down[si, 0] == tree._srv_nvlink[si] + 2
+
+    def test_path_row_uses_chosen_nics(self):
+        tree = FatTree(nics_per_server=4)
+        rng = np.random.default_rng(0)
+        src, dst = (0, 0, 0), (0, 0, 1)
+        row, k = tree.path_row(src, dst, rng, nics=(2, 3))
+        assert int(row[0]) == tree._nic_up[src][2]
+        assert int(row[k - 1]) == tree._nic_down[dst][3]
+
+    def test_path_row_matches_flow_path_multinic(self):
+        tree = FatTree(nics_per_server=4)
+        r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+        for src, dst, nics in [((0, 0, 0), (0, 0, 1), (1, 2)),
+                               ((0, 0, 0), (0, 1, 0), (3, 0)),
+                               ((0, 1, 1), (1, 0, 1), (2, 2))]:
+            row, k = tree.path_row(src, dst, r1, nics=nics)
+            assert [int(x) for x in row[:k]] == tree.flow_path(src, dst, r2, nics=nics)
+
+
+# ---------------------------------------------------------------- policies
+class TestNicPolicies:
+    def test_single_nic_consumes_no_rng(self):
+        """With one NIC per server every policy must leave the ECMP RNG
+        stream untouched (bit-compat with the pre-NIC engines)."""
+        tree = FatTree(nics_per_server=1)
+        for name in ("hash", "least-loaded", "rail-affine"):
+            pol = make_nic_policy(name)
+            rng = np.random.default_rng(3)
+            probe = np.random.default_rng(3)
+            assert pol.pick(tree, 0, 1, rng) == (0, 0)
+            assert rng.integers(1 << 30) == probe.integers(1 << 30)
+
+    def test_hash_spreads_across_nics(self):
+        tree = FatTree(nics_per_server=4)
+        pol = make_nic_policy("hash")
+        rng = np.random.default_rng(0)
+        picks = {pol.pick(tree, 0, 1, rng) for _ in range(64)}
+        assert len({p[0] for p in picks}) == 4
+        assert len({p[1] for p in picks}) == 4
+
+    def test_rail_affine_round_robin(self):
+        tree = FatTree(nics_per_server=4)
+        pol = make_nic_policy("rail-affine")
+        rng = np.random.default_rng(0)
+        seq = [pol.pick(tree, 0, 1, rng) for _ in range(6)]
+        assert seq == [(0, 0), (1, 1), (2, 2), (3, 3), (0, 0), (1, 1)]
+
+    def test_least_loaded_avoids_occupied_rail(self):
+        tree = FatTree(n_pods=1, racks_per_pod=1, servers_per_rack=4,
+                       nics_per_server=2)
+        net = FlowPlane(tree, BackgroundTraffic(0.0), seed=0,
+                        nic_policy="least-loaded")
+        net.start_transfer((0, 0, 0), (0, 0, 1), 1e9, 0.0, lambda t, n: None)
+        net.start_transfer((0, 0, 0), (0, 0, 2), 1e9, 0.0, lambda t, n: None)
+        # Each transfer rides its own src NIC: both attain the full B_1.
+        per_transfer = {}
+        for f in net.flows.values():
+            per_transfer.setdefault(f.transfer.transfer_id, 0.0)
+            per_transfer[f.transfer.transfer_id] += f.rate
+        for agg in per_transfer.values():
+            assert abs(agg - B1) / B1 < 1e-9
+
+    def test_single_nic_shares_where_multinic_does_not(self):
+        """The same two-transfer pattern on one NIC halves; the analytic
+        contrast that makes the NIC sweep (exp9) meaningful."""
+        tree = FatTree(n_pods=1, racks_per_pod=1, servers_per_rack=4,
+                       nics_per_server=1)
+        net = FlowPlane(tree, BackgroundTraffic(0.0), seed=0)
+        net.start_transfer((0, 0, 0), (0, 0, 1), 1e9, 0.0, lambda t, n: None)
+        net.start_transfer((0, 0, 0), (0, 0, 2), 1e9, 0.0, lambda t, n: None)
+        agg = sum(f.rate for f in net.flows.values())
+        assert abs(agg - B1) / B1 < 1e-9   # shared nic_up caps the sum
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError):
+            FlowPlane(FatTree(), BackgroundTraffic(0.0), nic_policy="nope")
+
+
+# ------------------------------------------------------------------ rewire
+class TestRewire:
+    def test_rewire_swaps_both_link_tables(self):
+        tree = FatTree()
+        before = tree.link_capacity.copy()
+        epoch = tree.rewire(scale={2: 0.5, 3: 0.25})
+        assert epoch == tree.topo_epoch == 1
+        t2 = tree.link_tier == 2
+        t3 = tree.link_tier == 3
+        assert np.all(tree.link_capacity[t2] == before[t2] * 0.5)
+        assert np.all(tree.link_capacity[t3] == before[t3] * 0.25)
+        assert np.all(tree.link_capacity[~(t2 | t3)] == before[~(t2 | t3)])
+        for l in tree.links:   # per-object records swap in the same call
+            assert l.capacity == tree.link_capacity[l.link_id]
+
+    def test_rewire_absolute_and_restore(self):
+        tree = FatTree()
+        base3 = tree.tier_bandwidth[3]
+        tree.rewire(tier_bandwidth={3: 1e9})
+        assert tree.tier_bandwidth[3] == 1e9
+        tree.rewire(scale={3: 0.25})
+        tree.rewire(scale={3: 4.0})
+        assert tree.tier_bandwidth[3] == 1e9   # power-of-two round trip
+        tree.rewire(tier_bandwidth={3: base3})
+        assert np.all(
+            tree.link_capacity[tree.link_tier == 3] == base3)
+
+    def test_rewire_unknown_tier_rejected(self):
+        with pytest.raises(KeyError):
+            FatTree().rewire(tier_bandwidth={7: 1e9})
+
+    def test_inflight_flows_rewaterfilled(self):
+        """A tier-3 transfer's rate tracks the uplink capacity through a
+        degrade/restore cycle — never silently above the live capacity."""
+        tree = FatTree(n_tor_uplinks=1, n_agg_uplinks=1)
+        net = FlowPlane(tree, BackgroundTraffic(0.0), seed=0)
+        net.start_transfer((0, 0, 0), (1, 0, 0), 1e12, 0.0, lambda t, n: None)
+        b3 = PAPER_TIER_BANDWIDTH[3]
+        assert abs(sum(f.rate for f in net.flows.values()) - b3) / b3 < 1e-9
+        tree.rewire(scale={3: 0.5})
+        net.on_rewire(0.010)
+        agg = sum(f.rate for f in net.flows.values())
+        assert abs(agg - b3 / 2) / b3 < 1e-9
+        load, resid = net.link_utilization()
+        assert np.all(load <= resid * (1 + 1e-9) + 1e-6)
+        tree.rewire(scale={3: 2.0})
+        net.on_rewire(0.020)
+        agg = sum(f.rate for f in net.flows.values())
+        assert abs(agg - b3) / b3 < 1e-9
+
+    def test_rewire_inside_epoch_rejected(self):
+        net = FlowPlane(FatTree(), BackgroundTraffic(0.0), seed=0)
+        net.begin_epoch()
+        with pytest.raises(RuntimeError):
+            net.on_rewire(0.0)
+        net.end_epoch()
+
+    def test_completion_timeline_shifts(self):
+        """Halving capacity mid-flight doubles the remaining drain time."""
+        tree = FatTree(n_tor_uplinks=1, n_agg_uplinks=1)
+        net = FlowPlane(tree, BackgroundTraffic(0.0), seed=0)
+        done = []
+        b3 = PAPER_TIER_BANDWIDTH[3]
+        net.start_transfer((0, 0, 0), (1, 0, 0), b3, 0.0,
+                           lambda t, n: done.append(n))   # 1 s uncontested
+        half = 0.5
+        net.advance(half)
+        tree.rewire(scale={3: 0.5})
+        net.on_rewire(half)
+        _drain(net, now=half)
+        assert done and abs(done[0] - 1.5) < 1e-6
+
+
+# ------------------------------------------------- parity across the fabric
+def _drive_pair(tree_kw, seed, *, nic_policy="hash", n_ops=60, bg=0.0,
+                rewire_every=None):
+    """Randomised op sequence through both engines, rewires interleaved."""
+    plane = FlowPlane(FatTree(**tree_kw), BackgroundTraffic(bg), seed=seed,
+                      nic_policy=nic_policy)
+    ref = ReferenceFlowNetwork(FatTree(**tree_kw), BackgroundTraffic(bg),
+                               seed=seed, nic_policy=nic_policy)
+    wl = np.random.default_rng(seed + 0x7090)
+    servers = _servers(plane.tree)
+    done_a, done_b = [], []
+    now = 0.0
+    scales = [0.25, 0.5, 2.0, 4.0]
+    for op_i in range(n_ops):
+        now += float(wl.exponential(0.003))
+        op = wl.random()
+        if rewire_every and op_i and op_i % rewire_every == 0:
+            tier = int(wl.integers(1, 4))
+            f = scales[int(wl.integers(len(scales)))]
+            plane.tree.rewire(scale={tier: f})
+            ref.tree.rewire(scale={tier: f})
+            plane.on_rewire(now)
+            ref.refresh_rates(now)
+        elif op < 0.6:
+            i, j = wl.choice(len(servers), 2, replace=False)
+            nbytes = float(wl.uniform(1e6, 5e8))
+            plane.start_transfer(
+                servers[i], servers[j], nbytes, now,
+                on_complete=lambda t, tt: done_a.append((t.transfer_id, tt)))
+            ref.start_transfer(
+                servers[i], servers[j], nbytes, now,
+                on_complete=lambda t, tt: done_b.append((t.transfer_id, tt)))
+        else:
+            na, nb = plane.next_completion_time(now), ref.next_completion_time(now)
+            assert na == nb
+            if na is not None:
+                now = na
+                plane.advance(now)
+                ref.advance(now)
+        fa = {f: (v.rate, v.bytes_remaining, v.path) for f, v in plane.flows.items()}
+        fb = {f: (v.rate, v.bytes_remaining, v.path) for f, v in ref.flows.items()}
+        assert fa == fb
+    for _ in range(10_000):
+        na, nb = plane.next_completion_time(now), ref.next_completion_time(now)
+        assert na == nb
+        if na is None:
+            break
+        now = na
+        plane.advance(now)
+        ref.advance(now)
+    else:  # pragma: no cover
+        pytest.fail("drain did not converge")
+    return plane, ref, done_a, done_b
+
+
+TREE_64 = dict(n_pods=2, racks_per_pod=2, servers_per_rack=2, gpus_per_server=8)
+
+
+class TestParityAcrossRewire:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_rewire_completion_order_bit_exact(self, seed):
+        plane, ref, da, db = _drive_pair(TREE_64, seed, rewire_every=8)
+        assert da == db                       # completion order AND times
+        assert plane.bytes_delivered == ref.bytes_delivered
+        assert plane.tier_utilization_observed(0.0) == \
+            ref.tier_utilization_observed(0.0)
+
+    @pytest.mark.parametrize("policy", ["hash", "least-loaded", "rail-affine"])
+    def test_multinic_policy_parity(self, policy):
+        kw = dict(TREE_64, nics_per_server=4)
+        plane, ref, da, db = _drive_pair(kw, 1, nic_policy=policy)
+        assert da == db
+        assert plane.bytes_delivered == ref.bytes_delivered
+
+    def test_multinic_rewire_parity(self):
+        kw = dict(TREE_64, nics_per_server=2)
+        plane, ref, da, db = _drive_pair(kw, 2, nic_policy="least-loaded",
+                                         rewire_every=10, bg=0.2)
+        assert da == db
+        assert plane.bytes_delivered == ref.bytes_delivered
+
+
+# ------------------------------------------------------------ property tests
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_byte_conservation_across_rewire(data):
+    """Property: a mid-flight capacity swap neither loses nor duplicates
+    bytes — total delivered equals the sum of transfer sizes."""
+    tree = FatTree(nics_per_server=data.draw(st.integers(1, 4)))
+    net = FlowPlane(tree, BackgroundTraffic(0.0),
+                    seed=data.draw(st.integers(0, 999)))
+    servers = _servers(tree)
+    total = 0.0
+    for _ in range(data.draw(st.integers(1, 6))):
+        i = data.draw(st.integers(0, len(servers) - 1))
+        j = data.draw(st.integers(0, len(servers) - 1))
+        if i == j:
+            continue
+        b = data.draw(st.floats(1e6, 1e9))
+        total += b
+        net.start_transfer(servers[i], servers[j], b, 0.0, lambda t, n: None)
+    # Drain a few epochs, swap capacities, drain to empty.
+    now = 0.0
+    for _ in range(data.draw(st.integers(0, 3))):
+        nxt = net.next_completion_time(now)
+        if nxt is None:
+            break
+        now = nxt
+        net.advance(now)
+    tier = data.draw(st.integers(1, 3))
+    tree.rewire(scale={tier: data.draw(st.sampled_from([0.25, 0.5, 2.0]))})
+    net.on_rewire(now)
+    _drain(net, now=now)
+    assert abs(net.bytes_delivered - total) < max(1e-6 * total, 64.0)
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_max_min_invariants_after_rewire(data):
+    """Property: after a rewire + re-water-fill, no link is over residual
+    capacity and every flow is bottlenecked on its path (max-min holds
+    against the NEW capacities)."""
+    tree = FatTree(nics_per_server=data.draw(st.integers(1, 4)))
+    net = FlowPlane(tree, BackgroundTraffic(data.draw(st.floats(0.0, 0.5))),
+                    seed=data.draw(st.integers(0, 999)))
+    servers = _servers(tree)
+    rng = np.random.default_rng(data.draw(st.integers(0, 999)))
+    for _ in range(data.draw(st.integers(1, 8))):
+        i, j = rng.choice(len(servers), 2, replace=False)
+        net.start_transfer(servers[i], servers[j],
+                           float(rng.uniform(1e6, 1e9)), 0.0, lambda t, n: None)
+    tier = data.draw(st.integers(1, 3))
+    tree.rewire(scale={tier: data.draw(st.sampled_from([0.25, 0.5, 2.0, 4.0]))})
+    net.on_rewire(0.001)
+    load, resid = net.link_utilization()
+    assert np.all(load <= resid * (1 + 1e-9) + 1e-6)
+    for f in net.flows.values():
+        assert f.rate > 0
+        saturated = any(load[l] >= resid[l] * (1 - 1e-9) - 1e-6 for l in f.path)
+        assert saturated, f"flow {f.flow_id} not bottlenecked after rewire"
+
+
+# ------------------------------------------------------------------- oracle
+class TestOracleRewireAware:
+    @staticmethod
+    def _tier_of(a, b):
+        return 3
+
+    def test_static_source_reflects_topology_not_paper(self):
+        """Regression: an oracle built from a halved-uplink tree must report
+        the tree's bandwidths, not the PAPER_TIER_BANDWIDTH constants."""
+        halved = {t: (b / 2 if t >= 2 else b)
+                  for t, b in PAPER_TIER_BANDWIDTH.items()}
+        tree = FatTree(tier_bandwidth=halved)
+        oracle = NetworkCostOracle(tier_of=self._tier_of, topology=tree)
+        bw = oracle.view(0.0).bandwidth_array()
+        assert bw[2] == PAPER_TIER_BANDWIDTH[2] / 2
+        assert bw[3] == PAPER_TIER_BANDWIDTH[3] / 2
+        assert bw[1] == PAPER_TIER_BANDWIDTH[1]
+
+    def test_rewire_reaches_scheduler_at_next_refresh_only(self):
+        tree = FatTree()
+        oracle = NetworkCostOracle(tier_of=self._tier_of, topology=tree,
+                                   refresh_interval=1.0)
+        pre = oracle.view(0.0)
+        tree.rewire(scale={3: 0.25})
+        stale = oracle.view(0.5)               # within the refresh interval
+        assert stale is pre
+        assert stale.bandwidth_array()[3] == PAPER_TIER_BANDWIDTH[3]
+        fresh = oracle.view(1.5)
+        assert fresh.bandwidth_array()[3] == PAPER_TIER_BANDWIDTH[3] * 0.25
+
+    def test_snapshot_immutable_between_refreshes(self):
+        """The published snapshot must hold pre-rewire values by copy, not
+        track the live dict."""
+        tree = FatTree()
+        oracle = NetworkCostOracle(tier_of=self._tier_of, topology=tree)
+        view = oracle.view(0.0)
+        tree.rewire(scale={2: 0.5})
+        assert view.tier_bandwidth[2] == PAPER_TIER_BANDWIDTH[2]
+
+    def test_default_construction_copies_paper_constants(self):
+        oracle = NetworkCostOracle(tier_of=self._tier_of)
+        oracle.tier_bandwidth[3] = 1.0
+        assert PAPER_TIER_BANDWIDTH[3] != 1.0   # module constant untouched
+
+    def test_measured_source_across_capacity_swap(self):
+        tree = FatTree(n_tor_uplinks=1, n_agg_uplinks=1)
+        net = FlowPlane(tree, BackgroundTraffic(0.2), seed=0)
+        oracle = NetworkCostOracle(
+            tier_of=self._tier_of, topology=tree,
+            measured_fn=lambda now: net.measured_tier_congestion(now),
+            source="measured", refresh_interval=0.5)
+        net.start_transfer((0, 0, 0), (1, 0, 0), 1e12, 0.0, lambda t, n: None)
+        before = oracle.view(0.0)
+        tree.rewire(scale={2: 0.25, 3: 0.25})
+        net.on_rewire(0.1)
+        after = oracle.view(1.0)
+        for t in TIERS:
+            assert 0.0 <= after.congestion[t] < 1.0
+        # The saturated uplink stays saturated against the NEW capacity.
+        assert after.congestion[3] >= before.congestion[3] - 1e-9
+        assert after.tier_bandwidth[3] == PAPER_TIER_BANDWIDTH[3] * 0.25
+
+
+# ------------------------------------------------------------- end-to-end
+class TestSimulatorRewire:
+    def _run(self, **cfg_kw):
+        from repro.sim import SimConfig, run_sim
+        from repro.traces import generate_trace, profile_capacity
+
+        cap = profile_capacity("rag")
+        trace = generate_trace("rag", duration=5.0, target_rps=cap, seed=0)
+        cfg = SimConfig(scheduler="netkv-full", seed=0, warmup=1.0,
+                        measure=3.0, background=0.2, **cfg_kw)
+        from repro.sim import Simulation
+
+        sim = Simulation(cfg)
+        metrics = sim.run(trace, drain=30.0)
+        return sim, metrics
+
+    def test_rewire_schedule_applies(self):
+        from repro.sim import RewireEvent
+
+        sim, m = self._run(rewires=[
+            RewireEvent(time=2.0, scale={2: 0.25, 3: 0.25}),
+            RewireEvent(time=3.5, scale={2: 4.0, 3: 4.0}),
+        ])
+        assert sim.tree.topo_epoch == 2
+        assert sim.tree.tier_bandwidth[3] == PAPER_TIER_BANDWIDTH[3]  # restored
+        assert m.n_measured > 0 and np.isfinite(m.ttft_mean)
+
+    def test_degrade_hurts_vs_control(self):
+        """A deterministic seed: permanently degrading the uplinks must not
+        make transfers faster."""
+        from repro.sim import RewireEvent
+
+        _, ctrl = self._run()
+        _, deg = self._run(rewires=[
+            RewireEvent(time=1.5, scale={2: 0.1, 3: 0.1})])
+        assert deg.xfer_mean >= ctrl.xfer_mean
+
+    @pytest.mark.parametrize("policy", ["hash", "least-loaded", "rail-affine"])
+    def test_multinic_policies_end_to_end(self, policy):
+        _, m = self._run(nics_per_server=4, nic_policy=policy)
+        assert m.n_measured > 0 and np.isfinite(m.ttft_mean)
+
+
+# ----------------------------------------------- vectorised admission unit
+class TestVectorisedAdmission:
+    def test_batch_admission_tbt_matches_scalar_model(self):
+        """One kick admitting k queued requests must assign the same
+        TBT-at-entry sequence t_iter(beta+1..beta+k) * scale the per-request
+        reference loop produces."""
+        from repro.core.cost import H100_TP4_ITER, H100_TP4_PREFILL, LLAMA3_70B_KV
+        from repro.core.view import ClusterView
+        from repro.sim import EventLoop, InstancePlane, RequestState
+        from repro.traces.mooncake import Request
+
+        class Meta:
+            def __init__(self, iid, srv):
+                self.instance_id, self.server = iid, srv
+
+        view = ClusterView(capacity=1)
+        plane = InstancePlane([], [Meta(0, (0, 0, 0))], view=view,
+                              loop=EventLoop(), iter_model=H100_TP4_ITER,
+                              prefill_model=H100_TP4_PREFILL, beta_max=8,
+                              kv_spec=LLAMA3_70B_KV, kv_budget=1e18)
+        plane.set_decode_callbacks(None, None)
+        plane.d_iter_scale[0] = 1.5
+        for rid in range(5):
+            req = Request(request_id=rid, arrival=0.0, input_len=32,
+                          output_len=4, block_hashes=((rid, 0),),
+                          share_group=-1, slo=5.0)
+            plane.enqueue(0, RequestState(req=req, kv_bytes=1e6), 0.0)
+        plane.kick([0], 0.0)
+        got = sorted((rs.req.request_id, rs.tbt)
+                     for rs in (plane.r_obj[r] for r in plane._inst_rows[0]))
+        want = [(i, H100_TP4_ITER(i + 1) * 1.5) for i in range(5)]
+        assert got == want
+        assert all(rs.admit_time == 0.0
+                   for rs in (plane.r_obj[r] for r in plane._inst_rows[0]))
