@@ -15,8 +15,14 @@ Three arms per pool size:
   the RadixPlane broadcast LCP vs D per-instance ``hit_tokens`` walks (the
   per-decision scheduler cost ClusterView exposed in PR 1).
 
-Acceptance floor (CI-gated): the plane must hold >= 10x steady
-iteration-step throughput at 1024 decode instances.
+A fourth, prefill-side arm exercises the ChunkPlane: a submission storm of
+mixed-length prompts routed by ``pick_prefill`` and prefilled to completion
+— the chunk-interleaved plane (vectorised ETA argmin, one event per
+iteration) vs the retired serial reference (per-pick Python queue walks).
+
+Acceptance floors (CI-gated): the plane must hold >= 10x steady
+iteration-step throughput at 1024 decode instances, and chunked prefill
+must not fall below 1.0x the serial reference path.
 """
 
 from __future__ import annotations
@@ -38,6 +44,11 @@ BETA = 64                   # full continuous batch per instance
 ROUNDS = 10                 # iteration rounds timed per arm
 SPEEDUP_FLOOR = 10.0        # required plane/reference ratio at 1024
 CHURN_FLOOR = 1.0           # vectorised epoch-batched admission gate at 1024
+CHUNK_FLOOR = 1.0           # chunked plane vs serial reference prefill gate
+PREFILL_N = 8               # prefill pool size for the chunked arm
+PREFILL_REQS = 600          # submission-storm size
+CHUNK_TOKENS = 512
+CHUNK_BUDGET = 4096
 
 
 class _Meta:
@@ -129,6 +140,38 @@ def _hit_row(kind: str, n_dec: int, blocks: int = 128, reps: int = 20) -> float:
     return (time.perf_counter() - t0) / reps
 
 
+def _prefill_arm(kind: str, chunked: bool, n_req: int = PREFILL_REQS) -> float:
+    """Wall seconds to route (pick_prefill) and fully prefill a submission
+    storm of mixed-length prompts on an 8-instance pool."""
+    loop = EventLoop()
+    view = ClusterView(capacity=1)
+    pre = [_Meta(i, (0, 0, i)) for i in range(PREFILL_N)]
+    cls = InstancePlane if kind == "plane" else ReferenceInstanceEngine
+    eng = cls(pre, [], view=view, loop=loop, iter_model=H100_TP4_ITER,
+              prefill_model=H100_TP4_PREFILL, beta_max=BETA,
+              kv_spec=LLAMA3_70B_KV, kv_budget=1e18,
+              chunk_tokens=CHUNK_TOKENS if chunked else None,
+              prefill_token_budget=CHUNK_BUDGET if chunked else None)
+    done = []
+    eng.on_prefill_done = lambda rs, now: done.append(rs)
+    rss = [
+        RequestState(
+            req=Request(request_id=i, arrival=0.0,
+                        input_len=1024 + (i % 7) * 512, output_len=1,
+                        block_hashes=((i, 0),), share_group=-1, slo=5.0),
+            kv_bytes=1e6,
+        )
+        for i in range(n_req)
+    ]
+    t0 = time.perf_counter()
+    for rs in rss:
+        eng.pick_prefill(0.0).submit(rs, 0.0)
+    loop.run()
+    wall = time.perf_counter() - t0
+    assert len(done) == n_req
+    return wall
+
+
 def run(quick: bool = False) -> list[dict]:
     sizes = QUICK_SIZES if quick else SIZES
     rows = []
@@ -151,7 +194,22 @@ def run(quick: bool = False) -> list[dict]:
               f"churn {row['churn_speedup']:.1f}x "
               f"hit_row {row['hit_row_speedup']:.1f}x")
         rows.append(row)
+    # ChunkPlane prefill arm (pool-size independent, run once).
+    prow = dict(decode_instances=0, arm="chunked_prefill",
+                n_requests=PREFILL_REQS)
+    prow["plane_chunked_prefill_s"] = _prefill_arm("plane", chunked=True)
+    prow["ref_serial_prefill_s"] = _prefill_arm("reference", chunked=False)
+    prow["chunked_prefill_speedup"] = (
+        prow["ref_serial_prefill_s"] / prow["plane_chunked_prefill_s"])
+    print(f"  decode_throughput prefill: chunked plane "
+          f"{prow['chunked_prefill_speedup']:.1f}x vs serial reference "
+          f"({prow['plane_chunked_prefill_s']*1e3:.0f}ms vs "
+          f"{prow['ref_serial_prefill_s']*1e3:.0f}ms, {PREFILL_REQS} reqs)")
+    rows.append(prow)
     write_csv("decode_throughput", rows)
+    assert prow["chunked_prefill_speedup"] >= CHUNK_FLOOR, (
+        f"ChunkPlane prefill {prow['chunked_prefill_speedup']:.2f}x vs the "
+        f"serial reference is below the {CHUNK_FLOOR:.1f}x floor")
     # Acceptance gates, enforced wherever the 1024 arm runs (incl. CI smoke).
     for r in rows:
         if r["decode_instances"] >= 1024:
@@ -171,11 +229,14 @@ def run(quick: bool = False) -> list[dict]:
 def main(quick: bool = False) -> None:
     t0 = time.time()
     rows = run(quick)
-    best = rows[-1]
+    best = max((r for r in rows if "steady_speedup" in r),
+               key=lambda r: r["decode_instances"])
+    chunk = next(r for r in rows if r.get("arm") == "chunked_prefill")
     emit("decode_throughput", (time.time() - t0) * 1e6 / max(len(rows), 1),
          f"D{best['decode_instances']}:steady={best['steady_speedup']:.0f}x,"
          f"churn={best['churn_speedup']:.1f}x,"
-         f"hit_row={best['hit_row_speedup']:.1f}x")
+         f"hit_row={best['hit_row_speedup']:.1f}x,"
+         f"chunked_prefill={chunk['chunked_prefill_speedup']:.1f}x")
 
 
 if __name__ == "__main__":

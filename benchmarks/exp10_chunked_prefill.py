@@ -1,0 +1,119 @@
+"""Beyond-paper experiment 10: ChunkPlane — chunked prefill x streamed KV.
+
+Three axes over the rag workload (long-tailed 4k-64k inputs, the regime
+where the network term matters most), TTFT/SLO per scheduler:
+
+(a) **Chunk-size sweep** — serial whole-request prefill (the paper's
+    model) vs chunk-interleaved prefill at 512 / 2048 tokens under a
+    4096-token iteration budget.  Interleaving alone removes head-of-line
+    blocking for short prompts but *delays* long ones — chunking without
+    streaming is roughly TTFT-neutral on mixtures.
+(b) **Streamed KV transfer** (``kv_streaming``) — completed chunks enter
+    the FlowPlane while later chunks still prefill; decode admission
+    waits for the last byte.  The transfer rides inside the prefill
+    shadow, so mean TTFT and observed transfer time drop — the FlowKV
+    low-latency-transfer effect, now scheduler-visible (the ladder's
+    T_xfer column credits the overlap via ``prefill_remaining`` /
+    ``tail_bytes``).
+(c) **Long-context pin** (full mode) — the same comparison with inputs
+    pinned to 16k tokens, Proposition 1's regime: the streaming win grows
+    with context length.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.sim import SimConfig, run_sim
+from repro.sim.metrics import aggregate_seeds
+from repro.traces import generate_trace, profile_capacity
+
+from .common import emit, knobs, write_csv
+
+SCHEDULERS = ["cla", "netkv-static", "netkv-full"]
+CHUNKS = [512, 2048]
+QUICK_CHUNKS = [2048]
+BUDGET = 4096          # prefill iteration token budget (co-batches chunks)
+LONG_LEN = 16384       # full-mode pinned-context arm
+BACKGROUND = 0.4
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    chunks = QUICK_CHUNKS if quick else CHUNKS
+    rows: list[dict] = []
+    cap = profile_capacity("rag")
+
+    def point(label, sched, cfg_kw, *, trace_kw=None, rate=1.0, **tags):
+        runs = []
+        for seed in range(k["seeds"]):
+            trace = generate_trace("rag", duration=k["duration"],
+                                   target_rps=cap * rate, seed=seed,
+                                   **(trace_kw or {}))
+            cfg = SimConfig(scheduler=sched, seed=seed, warmup=k["warmup"],
+                            measure=k["measure"], background=BACKGROUND,
+                            **cfg_kw)
+            runs.append(run_sim(cfg, trace))
+        row = aggregate_seeds(runs)
+        row["variant"] = label
+        row.update(tags)
+        rows.append(row)
+        print(f"  exp10 {label}: ttft={row['ttft_mean']*1e3:.0f}ms "
+              f"xfer={row['xfer_mean']*1e3:.0f}ms "
+              f"slo={row['slo_attainment']:.3f}")
+        return row
+
+    def arms(sched, chunk, streaming, **tags):
+        if chunk is None:
+            return point(f"serial-{sched}", sched, {}, chunk=0, streaming=0,
+                         **tags)
+        cfg = {"chunk_tokens": chunk, "prefill_token_budget": BUDGET,
+               "kv_streaming": streaming}
+        tag = f"c{chunk}{'s' if streaming else ''}"
+        return point(f"{tag}-{sched}", sched, cfg, chunk=chunk,
+                     streaming=int(streaming), **tags)
+
+    # (a)+(b): chunk-size sweep x streaming on/off x schedulers.
+    for sched in SCHEDULERS:
+        arms(sched, None, False, axis="sweep")
+        for chunk in chunks:
+            arms(sched, chunk, False, axis="sweep")
+            arms(sched, chunk, True, axis="sweep")
+    # (c) long-context pin (full mode): serial vs best streamed arm.
+    if not quick:
+        for sched in ("cla", "netkv-full"):
+            point(f"long-serial-{sched}", sched, {},
+                  trace_kw={"input_len_override": LONG_LEN},
+                  axis="long", chunk=0, streaming=0)
+            point(f"long-c2048s-{sched}", sched,
+                  {"chunk_tokens": 2048, "prefill_token_budget": BUDGET,
+                   "kv_streaming": True},
+                  trace_kw={"input_len_override": LONG_LEN},
+                  axis="long", chunk=2048, streaming=1)
+    write_csv("exp10_chunked_prefill", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    by = {r["variant"]: r for r in rows}
+    chunk = QUICK_CHUNKS[0] if quick else CHUNKS[-1]
+    # Headline: the streamed-chunk TTFT cut for netkv-full vs its serial
+    # arm (the acceptance metric), plus the transfer-shadowing cut.
+    serial = by["serial-netkv-full"]
+    stream = by[f"c{chunk}s-netkv-full"]
+    ttft_cut = (1 - stream["ttft_mean"] / serial["ttft_mean"]) * 100
+    xfer_cut = (1 - stream["xfer_mean"] / serial["xfer_mean"]) * 100
+    derived = (f"stream_ttft_cut={ttft_cut:.1f}%;"
+               f"stream_xfer_cut={xfer_cut:.1f}%")
+    if not quick:
+        ls, lc = by["long-serial-netkv-full"], by["long-c2048s-netkv-full"]
+        derived += f";long_ttft_cut={(1 - lc['ttft_mean'] / ls['ttft_mean']) * 100:.1f}%"
+    emit("exp10_chunked_prefill",
+         (time.time() - t0) * 1e6 / max(len(rows), 1), derived)
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -25,6 +25,7 @@ from . import (
     exp7_scalability,
     exp8_beyond,
     exp9_extensions,
+    exp10_chunked_prefill,
     net_throughput,
     roofline,
     sched_latency,
@@ -40,6 +41,7 @@ HARNESSES = {
     "exp7": exp7_scalability,      # Table V / Fig. 5
     "exp8": exp8_beyond,           # beyond-paper
     "exp9": exp9_extensions,       # beyond-paper: TopoPlane (multi-NIC + OCS rewire)
+    "exp10": exp10_chunked_prefill,  # beyond-paper: ChunkPlane (chunked prefill + streamed KV)
     "sched_latency": sched_latency,
     "net_throughput": net_throughput,      # FlowPlane vs reference engine
     "decode_throughput": decode_throughput,  # InstancePlane vs reference

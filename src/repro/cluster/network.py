@@ -276,6 +276,16 @@ class FlowPlane:
             self._recompute_rates(dirty_links=np.concatenate(dirty))
 
     def abort_transfer(self, transfer: Transfer, now: float) -> None:
+        """Tear down every flow of ``transfer`` immediately.
+
+        The per-link open-flow counters (``_link_nflows``, the signal the
+        ``least-loaded`` NIC policy argmins over) are reconciled *here*, at
+        abort time, by ``_remove_slot`` — not when the flow would later
+        have been popped — and ``flows_open`` drops to zero with them, so
+        the Transfer record and the counters stay in lockstep with the
+        reference engine's recount (``tests/test_chunkplane.py`` proves
+        counter parity after fault-driven aborts).
+        """
         self.advance(now)
         dead = [s for s in self._tslots.pop(transfer.transfer_id, ())
                 if s in self._slot_order]
@@ -285,6 +295,7 @@ class FlowPlane:
         self._transfers.pop(transfer.transfer_id, None)
         transfer.aborted = True
         transfer.done = True
+        transfer.flows_open = 0
         if dead:
             self._recompute_rates(dirty_links=touched)
 
@@ -446,6 +457,12 @@ class FlowPlane:
         self.f_rate[slots] = rates
 
     # ------------------------------------------------------------ telemetry
+    def open_flow_counts(self) -> np.ndarray:
+        """Per-link open-flow counters (real links only) — the incremental
+        state the least-loaded NIC policy reads; must equal a from-scratch
+        recount of live flows at all times, including right after aborts."""
+        return self._link_nflows[:-1].copy()
+
     def tier_congestion(self, now: float) -> dict[int, float]:
         """Operator-side per-tier congestion, *excluding* marked KV flows.
 

@@ -110,14 +110,27 @@ class ReferenceFlowNetwork:
         return t
 
     def abort_transfer(self, transfer, now: float) -> None:
+        """Tear down every flow of ``transfer`` immediately (flow removal
+        reconciles the open-flow counts ``_nic_load`` recounts from, and
+        ``flows_open`` drops to zero with them — lockstep with FlowPlane)."""
         self.advance(now)
         dead = [fid for fid, f in self.flows.items() if f.transfer is transfer]
         for fid in dead:
             del self.flows[fid]
         transfer.aborted = True
         transfer.done = True
+        transfer.flows_open = 0
         if dead:
             self._recompute_rates(now)
+
+    def open_flow_counts(self) -> np.ndarray:
+        """Per-link open-flow counts recounted from live flows (the parity
+        oracle for FlowPlane's incremental ``_link_nflows``)."""
+        cnt = np.zeros(self.tree.n_links, np.int64)
+        for f in self.flows.values():
+            for l in f.path:
+                cnt[l] += 1
+        return cnt
 
     def advance(self, now: float) -> None:
         """Drain bytes at current rates from the last advance point to now."""

@@ -95,6 +95,34 @@ def transfer_time(
     return s_eff / beff + tier_latency
 
 
+def streamed_transfer_time(
+    s_eff: float,
+    tier_bw: float,
+    congestion: float,
+    n_inflight: int,
+    tier_latency: float,
+    prefill_remaining: float = 0.0,
+    tail_bytes: float | None = None,
+) -> float:
+    """Eq. (3) under chunk-streamed prefill/transfer overlap (ChunkPlane).
+
+    Chunks enter the network as they prefill, so the last byte lands at
+    the later of (a) the pipe draining all ``s_eff`` bytes from now and
+    (b) the final chunk — ``tail_bytes``, which only exists once prefill
+    ends ``prefill_remaining`` seconds from now — crossing the wire:
+
+        T_xfer = max(s_eff / B_eff,  prefill_remaining + tail / B_eff) + L_tau
+
+    With ``prefill_remaining == 0`` and ``tail_bytes in (None, >= s_eff)``
+    this is exactly ``transfer_time`` — the serial model.
+    """
+    if s_eff <= 0.0:
+        return tier_latency
+    beff = effective_bandwidth(tier_bw, congestion, n_inflight)
+    tail = s_eff if tail_bytes is None else min(max(tail_bytes, 0.0), s_eff)
+    return max(s_eff / beff, prefill_remaining + tail / beff) + tier_latency
+
+
 @dataclasses.dataclass(frozen=True)
 class IterTimeModel:
     """Piecewise-linear iteration-time model  t_iter(beta) = a + b * beta.

@@ -59,6 +59,31 @@ class OracleView:
     def congestion_array(self) -> np.ndarray:
         return np.array([self.congestion.get(t, 0.0) for t in TIERS], dtype=np.float64)
 
+    def est_transfer_time(
+        self,
+        s_eff: float,
+        tier: int,
+        n_inflight: int = 0,
+        prefill_remaining: float = 0.0,
+        tail_bytes: float | None = None,
+    ) -> float:
+        """Eq. (3) through this snapshot's maps, overlap-aware.
+
+        With the defaults this is the serial T_xfer; with
+        ``prefill_remaining``/``tail_bytes`` set it is the streamed-chunk
+        estimate (``cost.streamed_transfer_time``): bytes keep becoming
+        ready while prefill runs, so only the final-chunk tail is forced
+        to cross the wire after prefill ends.  The scalar twin of the
+        ladder's vectorised ``v_transfer_time`` column.
+        """
+        from .cost import streamed_transfer_time
+
+        return streamed_transfer_time(
+            s_eff, self.tier_bandwidth[tier], self.congestion.get(tier, 0.0),
+            n_inflight, self.tier_latency[tier],
+            prefill_remaining=prefill_remaining, tail_bytes=tail_bytes,
+        )
+
 
 @dataclasses.dataclass
 class TransferIntent:

@@ -66,11 +66,22 @@ class CandidateState:
 
 @dataclasses.dataclass
 class RequestInfo:
-    """What the scheduler knows about a request at selection time."""
+    """What the scheduler knows about a request at selection time.
+
+    Under streamed chunked prefill (``SimConfig.kv_streaming``) selection
+    happens at *first-chunk* readiness, and the two extra fields describe
+    the prefill/transfer overlap the network term may credit: bytes keep
+    becoming ready for ``prefill_remaining`` more seconds, and only the
+    final ``tail_bytes`` are forced to cross the wire after that.  Both
+    default to the serial (no-overlap) values, leaving every legacy code
+    path bit-identical.
+    """
 
     request_id: int
     input_len: int
     kv_bytes: float             # s_r (Eq. 1), aggregate across TP shards
+    prefill_remaining: float = 0.0   # s of prefill still to run (streaming)
+    tail_bytes: float | None = None  # final-chunk bytes (None = all of s_eff)
 
 
 @dataclasses.dataclass
@@ -112,11 +123,20 @@ def v_transfer_time(
     congestion_by_tier,
     n_by_tier,
     tier_latency,
+    prefill_remaining: float = 0.0,
+    tail_bytes: float | None = None,
 ) -> np.ndarray:
     """Eq. (3)-(4) gathered through the per-candidate tier row.
 
     Per-tier effective bandwidths are computed with the scalar cost.py
     helper (4 values), then gathered — identical arithmetic to the loop.
+
+    With ``prefill_remaining``/``tail_bytes`` set (streamed chunked
+    prefill), the column credits the prefill/transfer overlap per
+    candidate — ``max(s_eff/B_eff, prefill_remaining + tail/B_eff)`` with
+    the tail clamped to each candidate's s_eff (a deep prefix hit shrinks
+    the tail too); the defaults leave the serial op sequence untouched
+    (bit-identical to the reference loop).
     """
     beff = np.array(
         [effective_bandwidth(tier_bandwidth[t], congestion_by_tier[t], n_by_tier[t])
@@ -124,6 +144,12 @@ def v_transfer_time(
     )
     lat = np.array([tier_latency[t] for t in TIERS], np.float64)
     lat_row = lat[tier_row]
+    if prefill_remaining > 0.0 or tail_bytes is not None:
+        b_row = beff[tier_row]
+        tail = s_eff if tail_bytes is None else \
+            np.minimum(np.maximum(tail_bytes, 0.0), s_eff)
+        t_stream = np.maximum(s_eff / b_row, prefill_remaining + tail / b_row)
+        return np.where(s_eff <= 0.0, lat_row, t_stream + lat_row)
     return np.where(s_eff <= 0.0, lat_row, s_eff / beff[tier_row] + lat_row)
 
 
@@ -183,6 +209,8 @@ class Scheduler:
             s_eff, tier_row, oracle.tier_bandwidth,
             self._congestion_by_tier(oracle), self._n_by_tier(inflight, prefill_id),
             oracle.tier_latency,
+            prefill_remaining=req.prefill_remaining,
+            tail_bytes=req.tail_bytes,
         )
 
     # -- interface ----------------------------------------------------------
@@ -318,7 +346,10 @@ class NetKVFull(Scheduler):
         if idx.size == 0:
             return None
         tier_row = cv.tier_row(prefill_id)
-        if self.backend == "pallas":
+        if self.backend == "pallas" and req.prefill_remaining <= 0.0 \
+                and req.tail_bytes is None:
+            # The fused kernel evaluates the serial Eq. (3); streamed-chunk
+            # decisions (overlap-aware T_xfer) take the NumPy path.
             return self._select_pallas(
                 req, prefill_id, cv, oracle, inflight, s_eff, tier_row)
         t_x = self._xfer_vec(req, cv, prefill_id, oracle, inflight, s_eff, tier_row)

@@ -22,7 +22,15 @@ Columns (all length ``n``, slot-indexed):
   iter_scale   f64   straggler EWMA multiplier (scheduler-visible estimate)
   healthy      bool  scheduler-visible health (lags true health by the
                      fault detection delay — see Simulation._on_fault)
-  hit_tokens   f64   lambda_r(d) scratch column, filled per request
+  hit_tokens   f64   lambda_r(d) scratch column, filled per request.
+                     Under streamed chunked prefill (SimConfig.kv_streaming)
+                     the fill — and the whole selection pass — happens at
+                     *first-chunk* readiness rather than prefill end, and
+                     the request's full KV bytes are pinned (free_memory
+                     drops) from that earlier instant; the overlap itself
+                     reaches the ladder per request via
+                     RequestInfo.prefill_remaining / tail_bytes, not as a
+                     column (it is candidate-independent).
 
 Tier lookups are row-cached: ``tier_row(src_id)`` returns the (n,) tier
 vector from a source instance (prefill or staging store) to every slot,

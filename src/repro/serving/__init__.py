@@ -2,8 +2,11 @@
 
 from .engine import DecodeEngine, PrefillEngine, PrefillResult
 from .cluster import DisaggregatedCluster, ServeRequest, ServeResult
-from .transfer import pack_transfer, unpack_transfer
+from .transfer import (
+    merge_chunk_buffers, pack_transfer, pack_transfer_chunk, unpack_transfer,
+)
 
 __all__ = ["DecodeEngine", "PrefillEngine", "PrefillResult",
            "DisaggregatedCluster", "ServeRequest", "ServeResult",
-           "pack_transfer", "unpack_transfer"]
+           "merge_chunk_buffers", "pack_transfer", "pack_transfer_chunk",
+           "unpack_transfer"]

@@ -2,15 +2,19 @@
 
 from .engine import EventLoop
 from .kvcache import B_TOK, BlockCache, RadixPlane, n_blocks
-from .instances import DecodeHandle, InstancePlane, PrefillHandle, RequestState
-from .reference import DecodeSim, PrefillSim, ReferenceInstanceEngine
+from .instances import (
+    ChunkPlane, DecodeHandle, InstancePlane, PrefillHandle, RequestState,
+)
+from .reference import (
+    ChunkedPrefillSim, DecodeSim, PrefillSim, ReferenceInstanceEngine,
+)
 from .metrics import RunMetrics, aggregate_seeds, summarize
 from .simulator import FaultEvent, RewireEvent, SimConfig, Simulation, run_sim
 
 __all__ = [
     "EventLoop", "B_TOK", "BlockCache", "RadixPlane", "n_blocks",
-    "InstancePlane", "DecodeHandle", "PrefillHandle",
-    "DecodeSim", "PrefillSim", "ReferenceInstanceEngine",
+    "ChunkPlane", "InstancePlane", "DecodeHandle", "PrefillHandle",
+    "ChunkedPrefillSim", "DecodeSim", "PrefillSim", "ReferenceInstanceEngine",
     "RequestState", "RunMetrics", "aggregate_seeds", "summarize",
     "FaultEvent", "RewireEvent", "SimConfig", "Simulation", "run_sim",
 ]

@@ -20,6 +20,13 @@ with struct-of-arrays state and a single **cohort-stepped iteration clock**:
   ``busy_until`` and an *exact left-fold* ETA column, so arrival routing
   (min-ETA healthy instance) is one masked argmin instead of a Python scan
   that re-sums every queue.
+* **ChunkPlane** (``chunk_tokens`` set): the serial queues are replaced by
+  a chunk-interleaved continuous-batching prefill model — requests split
+  into fixed-token chunks, per-instance chunk queues round-robin
+  interleaved under a token budget per prefill iteration, per-chunk
+  admission callbacks (``on_chunk_done``) as each chunk's KV becomes
+  ready.  ``chunk_tokens=None`` (default) keeps the serial columns
+  untouched and bit-exact vs ``sim/reference.py``.
 * **RadixPlane cache**: per-instance prefix caches share one packed
   presence bitmask, so lambda_r(d) against all D instances is a single
   broadcast LCP (``fill_hits``).
@@ -78,6 +85,12 @@ class RequestState:
     tokens_out: int = 0
     rejected: bool = False
     requeues: int = 0  # fault-tolerance: times re-scheduled after a failure
+    # ---- chunked-prefill / streamed-transfer bookkeeping (ChunkPlane) ----
+    tokens_ready: int = 0        # prefilled tokens whose KV exists (chunked)
+    streamed_bytes: float = 0.0  # bytes handed to the network so far
+    stream_open: int = 0         # in-flight streamed chunk transfers
+    stream_scheduled: bool = False  # decode instance chosen at first chunk
+    stream_last: bool = False    # final chunk's bytes are in the network
 
     @property
     def ttft(self) -> float:
@@ -111,17 +124,25 @@ class PrefillHandle:
 
     @property
     def busy_until(self) -> float:
-        return float(self._p.p_busy[self.s])
+        p = self._p
+        if p.chunks is not None:
+            return float(p.chunks.busy[self.s])
+        return float(p.p_busy[self.s])
 
     @property
     def queued(self) -> int:
-        return int(self._p.p_qlen[self.s])
+        p = self._p
+        if p.chunks is not None:
+            return len(p.chunks.streams[self.s])
+        return int(p.p_qlen[self.s])
 
     def submit(self, rs: RequestState, now: float) -> None:
         self._p.submit_prefill(self.s, rs, now)
 
     def eta(self, now: float) -> float:
         p = self._p
+        if p.chunks is not None:
+            return p.chunks.eta(self.s, now)
         if p.p_qlen[self.s] > 0:
             return float(p.p_eta[self.s])
         return float(max(p.p_busy[self.s], now))
@@ -186,6 +207,181 @@ class DecodeHandle:
         return self._p.cache.hit_tokens(self.slot, req.block_hashes, req.input_len)
 
 
+class _ChunkStream:
+    """One request's chunk progress on a prefill instance."""
+
+    __slots__ = ("rs", "done", "cancelled")
+
+    def __init__(self, rs: RequestState):
+        self.rs = rs
+        self.done = 0            # tokens whose KV is ready
+        self.cancelled = False   # requeued mid-prefill (fault path)
+
+
+class ChunkPlane:
+    """Chunk-interleaved continuous-batching prefill engine.
+
+    Replaces the serial per-request prefill queues when
+    ``chunk_tokens`` is set: each request is split into fixed-token
+    chunks, and every *prefill iteration* serves the head of each
+    active request's chunk queue in round-robin order under a token
+    budget (Sarathi/DeepSpeed-FastGen-style chunked prefill).  The
+    iteration costs ``c * tokens_served + d * first_chunks`` — the
+    fixed per-request overhead ``d`` is charged once, with the first
+    chunk, so the total compute a request receives telescopes to
+    exactly the monolithic ``T_prefill(l) = c*l + d`` (chunk-duration
+    conservation, property-tested in ``tests/test_chunkplane.py``).
+
+    As each chunk's KV becomes ready the plane fires
+    ``owner.on_chunk_done(rs, tokens_ready, now)`` — the hook the
+    simulator uses to *stream* completed chunks into the FlowPlane
+    while later chunks are still prefilling (``SimConfig.kv_streaming``).
+
+    Columnar state (slot-indexed like the serial prefill columns):
+    ``busy`` (end of the in-flight iteration), ``backlog`` (unclaimed
+    tokens over all active requests) and ``pending`` (requests whose
+    fixed overhead ``d`` is still unpaid), so arrival routing is one
+    masked argmin over ``max(busy, now) + c*backlog + d*pending`` —
+    the same value the scalar reference oracle
+    (``sim/reference.py::ChunkedPrefillSim``) computes per instance,
+    bit-for-bit.
+    """
+
+    def __init__(self, owner: "InstancePlane", n_pre: int, *,
+                 chunk_tokens: int, token_budget: int | None):
+        if int(chunk_tokens) <= 0:
+            raise ValueError("chunk_tokens must be positive")
+        self.owner = owner
+        self.model = owner.prefill_model
+        self.chunk = int(chunk_tokens)
+        self.budget = int(token_budget) if token_budget is not None \
+            else int(chunk_tokens)
+        if self.budget <= 0:
+            raise ValueError("prefill_token_budget must be positive")
+        self.busy = np.zeros(n_pre, np.float64)
+        self.backlog = np.zeros(n_pre, np.int64)
+        self.pending = np.zeros(n_pre, np.int64)
+        self.streams: list[list[_ChunkStream]] = [[] for _ in range(n_pre)]
+        self.inflight: list[Optional[list]] = [None] * n_pre
+        self.iterations = 0      # telemetry: chunked prefill iterations
+
+    # ------------------------------------------------------------- routing
+    def eta_row(self, now: float, n: int) -> np.ndarray:
+        """Earliest-start estimate per instance: drain time of the current
+        backlog.  The new request's own ``c*l + d`` is an argmin-invariant
+        constant shift, exactly like the serial ETA fold's convention."""
+        return (np.maximum(self.busy[:n], now)
+                + self.model.c * self.backlog[:n]
+                + self.model.d * self.pending[:n])
+
+    def eta(self, s: int, now: float) -> float:
+        return float(max(self.busy[s], now)
+                     + self.model.c * self.backlog[s]
+                     + self.model.d * self.pending[s])
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, s: int, rs: RequestState, now: float) -> None:
+        self.streams[s].append(_ChunkStream(rs))
+        self.backlog[s] += rs.req.input_len
+        self.pending[s] += 1
+        self._maybe_start(s, now)
+
+    def cancel(self, s: int, rs: RequestState) -> None:
+        """Drop a request mid-prefill (fault requeue).  Tokens already
+        claimed by the in-flight iteration stay charged — that compute is
+        physically spent — but the unclaimed remainder leaves the backlog
+        and the stream fires no further callbacks."""
+        streams = self.streams[s]
+        for i, st in enumerate(streams):
+            if st.rs is rs:
+                break
+        else:
+            return
+        del streams[i]
+        st.cancelled = True
+        claimed = st.done
+        infl = self.inflight[s]
+        if infl is not None:
+            for entry, take in infl:
+                if entry is st:
+                    claimed += take
+                    break
+        self.backlog[s] -= max(rs.req.input_len - claimed, 0)
+        if st.done == 0 and claimed == 0:
+            # Overhead unpaid and not claimed by the running iteration.
+            self.pending[s] -= 1
+
+    # ------------------------------------------------- iteration scheduling
+    def _maybe_start(self, s: int, now: float) -> None:
+        if self.inflight[s] is not None or not self.owner.p_healthy[s] \
+                or self.backlog[s] == 0:
+            return
+        base = float(max(self.busy[s], now))
+        budget = self.budget
+        served: list[tuple[_ChunkStream, int]] = []
+        total = 0
+        nfirst = 0
+        # Round-robin: the stream list order IS the serve order; every
+        # stream has unclaimed tokens (finished ones are removed), so the
+        # served set is a prefix of the list, one chunk each, until the
+        # token budget runs out.
+        for st in self.streams[s]:
+            if budget <= 0:
+                break
+            take = min(self.chunk, st.rs.req.input_len - st.done, budget)
+            if st.done == 0:
+                nfirst += 1
+                st.rs.prefill_start = base
+            served.append((st, take))
+            budget -= take
+            total += take
+        self.backlog[s] -= total
+        self.pending[s] -= nfirst
+        self.busy[s] = base + (self.model.c * total + self.model.d * nfirst)
+        self.inflight[s] = served
+        self.owner.loop.at(float(self.busy[s]),
+                           lambda t, s=s: self._iteration_done(s, t))
+
+    def _iteration_done(self, s: int, now: float) -> None:
+        served = self.inflight[s]
+        self.inflight[s] = None
+        self.iterations += 1
+        streams = self.streams[s]
+        owner = self.owner
+        # Phase 1+2: account tokens and splice the stream list BEFORE any
+        # callback fires — a callback can synchronously re-enter this
+        # instance (streamed transfer completes instantly -> detection-
+        # window bounce -> requeue -> submit back here), and _maybe_start
+        # must then see consistent state, not the stale served prefix.
+        rotated: list[_ChunkStream] = []
+        live: list[_ChunkStream] = []
+        n_live = 0               # served entries still present in `streams`
+        for st, take in served:
+            if st.cancelled:
+                continue
+            n_live += 1
+            st.done += take
+            live.append(st)
+            if st.done < st.rs.req.input_len:
+                rotated.append(st)
+        # Served entries are the first n_live list items; unfinished ones
+        # rotate to the back (behind arrivals that landed mid-iteration).
+        self.streams[s] = streams[n_live:] + rotated
+        # Phase 3: callbacks, in served order; skip entries a previous
+        # callback cancelled (requeued mid-phase).
+        for st in live:
+            if st.cancelled:
+                continue
+            rs = st.rs
+            if owner.on_chunk_done is not None:
+                owner.on_chunk_done(rs, st.done, now)
+            if st.done >= rs.req.input_len:
+                rs.prefill_end = now
+                if owner.on_prefill_done is not None:
+                    owner.on_prefill_done(rs, now)
+        self._maybe_start(s, now)
+
+
 class InstancePlane:
     """Struct-of-arrays prefill/decode engine with one cohort iteration clock."""
 
@@ -193,7 +389,9 @@ class InstancePlane:
 
     def __init__(self, pre_meta, dec_meta, *, view: ClusterView, loop: EventLoop,
                  iter_model: IterTimeModel, prefill_model: PrefillTimeModel,
-                 beta_max: int, kv_spec: ModelKVSpec, kv_budget: float):
+                 beta_max: int, kv_spec: ModelKVSpec, kv_budget: float,
+                 chunk_tokens: int | None = None,
+                 prefill_token_budget: int | None = None):
         self.view = view
         self.loop = loop
         self.iter_model = iter_model
@@ -202,7 +400,9 @@ class InstancePlane:
         self.kv_spec = kv_spec
         self.kv_budget = kv_budget
         self.kv_per_token = kv_spec.kv_bytes_per_token
+        self.chunk_tokens = chunk_tokens
         self.on_prefill_done: Callable[[RequestState, float], None] | None = None
+        self.on_chunk_done: Callable[[RequestState, int, float], None] | None = None
         self._on_first_token: Callable | None = None
         self._on_finish: Callable | None = None
 
@@ -221,6 +421,13 @@ class InstancePlane:
         self.p_queue: list[deque] = [deque() for _ in range(n_pre)]
         self.p_running: list[Optional[RequestState]] = [None] * n_pre
         self.prefill = [PrefillHandle(self, s) for s in range(n_pre)]
+        self._pre_slot = {int(i): s for s, i in enumerate(self.p_ids)}
+        # ChunkPlane replaces the serial columns when chunk_tokens is set;
+        # chunk_tokens=None leaves every serial code path untouched.
+        self.chunks = ChunkPlane(
+            self, n_pre, chunk_tokens=chunk_tokens,
+            token_budget=prefill_token_budget,
+        ) if chunk_tokens is not None else None
 
         # ---------- decode columns (elastic membership) -------------------
         cap = max(len(dec_meta), 1)
@@ -298,19 +505,44 @@ class InstancePlane:
         n = self.n_pre
         if n == 0 or not self.p_healthy[:n].any():
             return None
-        eta = np.where(self.p_qlen[:n] > 0, self.p_eta[:n],
-                       np.maximum(self.p_busy[:n], now))
+        if self.chunks is not None:
+            eta = self.chunks.eta_row(now, n)
+        else:
+            eta = np.where(self.p_qlen[:n] > 0, self.p_eta[:n],
+                           np.maximum(self.p_busy[:n], now))
         eta = np.where(self.p_healthy[:n], eta, np.inf)
         return self.prefill[int(np.argmin(eta))]
 
     def submit_prefill(self, s: int, rs: RequestState, now: float) -> None:
         rs.prefill_instance = int(self.p_ids[s])
+        if self.chunks is not None:
+            self.chunks.submit(s, rs, now)
+            return
         q = self.p_queue[s]
         q.append(rs)
+        # ETA-fold shortcut, audited at the queue-drain boundary (see
+        # tests/test_chunkplane.py::TestSerialEtaBoundary): with the queue
+        # previously non-empty, p_eta already holds the exact left fold and
+        # a request is necessarily running, so p_busy >= now and appending
+        # one term keeps the fold exact.  With the queue previously empty
+        # p_busy may be stale (< now, instance idle), but _prefill_start
+        # below immediately pops this request and rebuilds the fold from
+        # max(now, p_busy) — the transient value is never observable.  The
+        # one unreachable gap: an *unhealthy* instance holds a stale fold
+        # until it next starts, and pick_prefill masks it to inf anyway.
         base = self.p_eta[s] if len(q) > 1 else self.p_busy[s]
         self.p_eta[s] = base + self.prefill_model(rs.req.input_len)
         self.p_qlen[s] = len(q)
         self._prefill_start(s, now)
+
+    def cancel_prefill(self, rs: RequestState) -> None:
+        """Drop a request that is still prefilling (fault-requeue path).
+
+        Only reachable in chunked mode: with serial prefill, transfers —
+        and hence fault requeues — only exist after prefill completes.
+        """
+        if self.chunks is not None:
+            self.chunks.cancel(self._pre_slot[rs.prefill_instance], rs)
 
     def _prefill_start(self, s: int, now: float) -> None:
         if self.p_running[s] is not None or not self.p_queue[s] \

@@ -38,50 +38,69 @@ class RunMetrics:
         return d
 
 
+def _pct(a: np.ndarray, q: float) -> float:
+    """NaN-safe percentile: np.percentile raises on empty input."""
+    return float(np.percentile(a, q)) if a.size else float("nan")
+
+
+def _mean(a: np.ndarray) -> float:
+    return float(a.mean()) if a.size else float("nan")
+
+
 def summarize(records, *, window: tuple[float, float], scheduler: str,
               decision_latencies=(), rejected: int = 0,
               decode_iterations: int = 0) -> RunMetrics:
-    """Aggregate per-request records whose ARRIVAL falls in the window."""
+    """Aggregate per-request records whose ARRIVAL falls in the window.
+
+    Degenerate windows are first-class: when nothing arrives (or nothing
+    reaches its first token) inside the window every distributional metric
+    is NaN rather than a crash or a fabricated sentinel — mid-sweep a
+    starved arm must produce a row that ``aggregate_seeds`` (which filters
+    non-finite values) can digest.  The previous implementation fed
+    ``np.percentile`` empty arrays (e.g. ``done`` non-empty but no record
+    with a valid TBT) and padded others with fake ``[0.0]``/``[inf]``
+    entries that skewed downstream means.
+    """
     lo, hi = window
     meas = [r for r in records if lo <= r.req.arrival < hi and not r.rejected]
     done = [r for r in meas if r.first_token >= 0]
     unfinished = len(meas) - len(done)
-    ttfts = np.array([r.ttft for r in done]) if done else np.array([np.inf])
-    tbts = np.array([r.tbt for r in done if r.tbt >= 0]) if done else np.array([0.0])
+    ttfts = np.array([r.ttft for r in done], np.float64)
+    fin_ttfts = ttfts[np.isfinite(ttfts)]
+    tbts = np.array([r.tbt for r in done if r.tbt >= 0], np.float64)
     # Transfer time: from prefill end (scheduling) to transfer landed.
-    xfers = np.array([r.transfer_end - r.prefill_end for r in done if r.transfer_end >= 0])
-    if xfers.size == 0:
-        xfers = np.array([0.0])
+    xfers = np.array([r.transfer_end - r.prefill_end for r in done
+                      if r.transfer_end >= 0], np.float64)
     slo_ok = sum(1 for r in done if r.ttft <= r.req.slo)
-    denom = max(len(meas), 1)
     span = max(hi - lo, 1e-9)
     tiers = [r.tier for r in done if r.tier >= 0]
     tier_frac = {
         t: (sum(1 for x in tiers if x == t) / max(len(tiers), 1)) for t in range(4)
     }
     hits = np.array(
-        [min(r.hit_tokens, r.req.input_len) / max(r.req.input_len, 1) for r in done]
-    ) if done else np.array([0.0])
-    dl = np.array(decision_latencies) if len(decision_latencies) else np.array([0.0])
+        [min(r.hit_tokens, r.req.input_len) / max(r.req.input_len, 1) for r in done],
+        np.float64,
+    )
+    dl = np.asarray(decision_latencies, np.float64)
     return RunMetrics(
         scheduler=scheduler,
         n_measured=len(meas),
         n_rejected=rejected,
         n_unfinished=unfinished,
-        ttft_mean=float(np.mean(ttfts[np.isfinite(ttfts)])) if np.isfinite(ttfts).any() else float("inf"),
-        ttft_p50=float(np.percentile(ttfts, 50)),
-        ttft_p95=float(np.percentile(ttfts, 95)),
-        ttft_p99=float(np.percentile(ttfts, 99)),
-        tbt_mean=float(np.mean(tbts)),
-        tbt_p95=float(np.percentile(tbts, 95)),
-        slo_attainment=slo_ok / denom,
+        ttft_mean=_mean(fin_ttfts),
+        ttft_p50=_pct(ttfts, 50),
+        ttft_p95=_pct(ttfts, 95),
+        ttft_p99=_pct(ttfts, 99),
+        tbt_mean=_mean(tbts),
+        tbt_p95=_pct(tbts, 95),
+        slo_attainment=slo_ok / len(meas) if meas else float("nan"),
         goodput_rps=slo_ok / span,
-        xfer_mean=float(np.mean(xfers)),
-        xfer_p95=float(np.percentile(xfers, 95)),
+        xfer_mean=_mean(xfers),
+        xfer_p95=_pct(xfers, 95),
         tier_fraction=tier_frac,
-        hit_frac_mean=float(np.mean(hits)),
-        decision_latency_mean=float(np.mean(dl)),
-        decision_latency_p99=float(np.percentile(dl, 99)),
+        hit_frac_mean=_mean(hits),
+        decision_latency_mean=_mean(dl),
+        decision_latency_p99=_pct(dl, 99),
         requeues=sum(r.requeues for r in meas),
         decode_iterations=decode_iterations,
     )

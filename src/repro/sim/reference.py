@@ -150,6 +150,132 @@ class PrefillSim:
         self._maybe_start(now)
 
 
+class ChunkedPrefillSim:
+    """Scalar chunk-interleaved prefill oracle (per-object).
+
+    The per-object mirror of the plane's ``ChunkPlane``: requests split
+    into ``chunk_tokens``-token chunks, one prefill iteration serves the
+    active requests' head chunks round-robin under ``token_budget`` tokens,
+    costing ``c * tokens_served + d * first_chunks`` (the fixed overhead
+    rides with the first chunk, so per-request compute telescopes to the
+    monolithic ``c*l + d``).  ``on_chunk(rs, tokens_ready, now)`` fires as
+    each chunk's KV becomes ready; ``on_done`` when the last one does.
+    Must stay bit-exact with ``ChunkPlane``
+    (``tests/test_chunkplane.py``), exactly like ``PrefillSim`` is the
+    serial oracle.
+    """
+
+    def __init__(self, instance_id: int, server, prefill_model: PrefillTimeModel,
+                 loop: EventLoop, chunk_tokens: int,
+                 token_budget: int | None = None):
+        self.instance_id = instance_id
+        self.server = server
+        self.model = prefill_model
+        self.loop = loop
+        self.chunk = int(chunk_tokens)
+        self.budget = int(token_budget) if token_budget is not None \
+            else int(chunk_tokens)
+        self.busy_until = 0.0
+        self.backlog = 0         # unclaimed tokens over all active requests
+        self.pending = 0         # requests whose fixed overhead d is unpaid
+        self.streams: list = []  # [rs, done_tokens, cancelled] in RR order
+        self.inflight = None     # [(stream, take), ...] of the running iter
+        self.on_done: Callable | None = None
+        self.on_chunk: Callable | None = None
+        self.healthy = True
+        self.iterations = 0
+
+    @property
+    def queued(self) -> int:
+        return len(self.streams)
+
+    def eta(self, now: float) -> float:
+        """Drain time of the current backlog (new request's own c*l + d is
+        an argmin-invariant constant, like PrefillSim.eta's convention)."""
+        return max(self.busy_until, now) + self.model.c * self.backlog \
+            + self.model.d * self.pending
+
+    def submit(self, rs, now: float) -> None:
+        rs.prefill_instance = self.instance_id
+        self.streams.append([rs, 0, False])
+        self.backlog += rs.req.input_len
+        self.pending += 1
+        self._maybe_start(now)
+
+    def cancel(self, rs) -> None:
+        for i, st in enumerate(self.streams):
+            if st[0] is rs:
+                break
+        else:
+            return
+        del self.streams[i]
+        st[2] = True
+        claimed = st[1]
+        if self.inflight is not None:
+            for entry, take in self.inflight:
+                if entry is st:
+                    claimed += take
+                    break
+        self.backlog -= max(rs.req.input_len - claimed, 0)
+        if st[1] == 0 and claimed == 0:
+            self.pending -= 1
+
+    def _maybe_start(self, now: float) -> None:
+        if self.inflight is not None or not self.healthy or self.backlog == 0:
+            return
+        base = float(max(self.busy_until, now))
+        budget = self.budget
+        served = []
+        total = 0
+        nfirst = 0
+        for st in self.streams:
+            if budget <= 0:
+                break
+            take = min(self.chunk, st[0].req.input_len - st[1], budget)
+            if st[1] == 0:
+                nfirst += 1
+                st[0].prefill_start = base
+            served.append((st, take))
+            budget -= take
+            total += take
+        self.backlog -= total
+        self.pending -= nfirst
+        self.busy_until = base + (self.model.c * total + self.model.d * nfirst)
+        self.inflight = served
+        self.loop.at(self.busy_until, self._iteration_done)
+
+    def _iteration_done(self, now: float) -> None:
+        served = self.inflight
+        self.inflight = None
+        self.iterations += 1
+        # Token accounting + stream-list splice BEFORE callbacks (which can
+        # synchronously requeue/submit back into this instance) — mirrors
+        # ChunkPlane._iteration_done's phase order exactly.
+        rotated = []
+        live = []
+        n_live = 0
+        for st, take in served:
+            if st[2]:
+                continue
+            n_live += 1
+            st[1] += take
+            live.append(st)
+            if st[1] < st[0].req.input_len:
+                rotated.append(st)
+        self.streams = self.streams[n_live:] + rotated
+        for st in live:
+            if st[2]:
+                continue
+            rs = st[0]
+            if self.on_chunk is not None:
+                self.on_chunk(rs, st[1], now)
+            if st[1] >= rs.req.input_len:
+                rs.prefill_end = now
+                if self.on_done is not None:
+                    self.on_done(rs, now)
+        self._maybe_start(now)
+
+
 class DecodeSim:
     """Continuous-batching decode instance with per-instance heap events
     (retired; the production engine is ``InstancePlane``)."""
@@ -336,7 +462,9 @@ class ReferenceInstanceEngine:
 
     def __init__(self, pre_meta, dec_meta, *, view: ClusterView, loop: EventLoop,
                  iter_model: IterTimeModel, prefill_model: PrefillTimeModel,
-                 beta_max: int, kv_spec: ModelKVSpec, kv_budget: float):
+                 beta_max: int, kv_spec: ModelKVSpec, kv_budget: float,
+                 chunk_tokens: int | None = None,
+                 prefill_token_budget: int | None = None):
         self.view = view
         self.loop = loop
         self.iter_model = iter_model
@@ -344,10 +472,19 @@ class ReferenceInstanceEngine:
         self.beta_max = beta_max
         self.kv_spec = kv_spec
         self.kv_budget = kv_budget
-        self.prefill = [
-            PrefillSim(m.instance_id, m.server, prefill_model, loop)
-            for m in pre_meta
-        ]
+        self.chunk_tokens = chunk_tokens
+        if chunk_tokens is not None:
+            self.prefill = [
+                ChunkedPrefillSim(m.instance_id, m.server, prefill_model,
+                                  loop, chunk_tokens, prefill_token_budget)
+                for m in pre_meta
+            ]
+        else:
+            self.prefill = [
+                PrefillSim(m.instance_id, m.server, prefill_model, loop)
+                for m in pre_meta
+            ]
+        self._pre_by_id = {p.instance_id: p for p in self.prefill}
         self.decode = [
             DecodeSim(m.instance_id, m.server, iter_model, beta_max,
                       kv_budget, kv_spec, loop, view=view)
@@ -365,6 +502,16 @@ class ReferenceInstanceEngine:
         for p in self.prefill:
             p.on_done = fn
 
+    @property
+    def on_chunk_done(self):
+        return self.prefill[0].on_chunk if self.prefill \
+            and self.chunk_tokens is not None else None
+
+    @on_chunk_done.setter
+    def on_chunk_done(self, fn) -> None:
+        for p in self.prefill:
+            p.on_chunk = fn
+
     def set_decode_callbacks(self, on_first_token, on_finish) -> None:
         self._on_first_token = on_first_token
         self._on_finish = on_finish
@@ -378,6 +525,11 @@ class ReferenceInstanceEngine:
         if not healthy:
             return None
         return min(healthy, key=lambda p: p.eta(now))
+
+    def cancel_prefill(self, rs) -> None:
+        """Drop a request still prefilling (chunked fault-requeue path)."""
+        if self.chunk_tokens is not None:
+            self._pre_by_id[rs.prefill_instance].cancel(rs)
 
     # ---------------------------------------------------------------- decode
     def decode_by_id(self, iid: int) -> DecodeSim:

@@ -106,6 +106,16 @@ class SimConfig:
     prefill_model: PrefillTimeModel = H100_TP4_PREFILL
     m_min: float = 2e9
     instance_engine: str = "plane"          # "plane" | "reference"
+    # chunked prefill (ChunkPlane): None = serial whole-request prefill
+    # (bit-exact legacy model); an int enables chunk-interleaved prefill
+    # with that chunk size.
+    chunk_tokens: int | None = None
+    prefill_token_budget: int | None = None  # tokens per prefill iteration
+    # Stream completed chunks into the network while later chunks still
+    # prefill: the decode instance is selected at *first* chunk readiness
+    # and each chunk's KV bytes enter the FlowPlane as it completes; decode
+    # admission still waits for the last byte.  Requires chunk_tokens.
+    kv_streaming: bool = False
     # oracle / network
     oracle_refresh: float = 1.0
     telemetry_source: str = "model"         # "model" | "measured"
@@ -150,9 +160,25 @@ class Simulation:
             tier_fn=lambda a, b: self.tree.tier(self._server_of[a], self._server_of[b]),
             capacity=max(len(dec_meta), 1),
         )
+        if cfg.kv_streaming:
+            if cfg.chunk_tokens is None:
+                raise ValueError("kv_streaming requires chunk_tokens")
+            if cfg.scheduler == "netkv-multihop":
+                raise ValueError("kv_streaming does not compose with the "
+                                 "staged multihop scheduler")
+            if cfg.scheduler == "netkv-batch":
+                # Streamed requests are committed per-request at first-chunk
+                # readiness; silently running the windowed joint assigner in
+                # that mode would degrade it to greedy select() under its
+                # own name.  Refuse until a first-chunk-keyed window exists
+                # (ROADMAP: streaming-aware batch window).
+                raise ValueError("kv_streaming does not compose with the "
+                                 "windowed netkv-batch scheduler yet")
         eng_kw = dict(view=self.view, loop=self.loop, iter_model=cfg.iter_model,
                       prefill_model=cfg.prefill_model, beta_max=cfg.beta_max,
-                      kv_spec=cfg.kv_spec, kv_budget=kv_budget)
+                      kv_spec=cfg.kv_spec, kv_budget=kv_budget,
+                      chunk_tokens=cfg.chunk_tokens,
+                      prefill_token_budget=cfg.prefill_token_budget)
         if cfg.instance_engine == "reference":
             self.engine = ReferenceInstanceEngine(pre_meta, dec_meta, **eng_kw)
         elif cfg.instance_engine == "plane":
@@ -203,7 +229,15 @@ class Simulation:
         self._batch_timer = None
         self._inbound: dict[int, list] = {}   # decode id -> [(rs, transfer)]
         self._epoch: list | None = None       # landing buffer during net fire
+        # Effective chunk granularity: the largest take a single iteration
+        # can give one request (sizes the streamed-tail estimate).
+        self._chunk_eff = None
+        if cfg.chunk_tokens is not None:
+            budget = cfg.prefill_token_budget or cfg.chunk_tokens
+            self._chunk_eff = min(cfg.chunk_tokens, budget)
         self.engine.on_prefill_done = self._on_prefill_done
+        if cfg.kv_streaming:
+            self.engine.on_chunk_done = self._on_chunk_done
         self.engine.set_decode_callbacks(lambda rs, now: None,
                                          lambda rs, now: None)
 
@@ -230,6 +264,22 @@ class Simulation:
         target.submit(rs, now)
 
     def _on_prefill_done(self, rs: RequestState, now: float) -> None:
+        if rs.rejected:
+            # Already rejected at first-chunk scheduling (kv_streaming):
+            # the remaining chunks prefilled in vain; don't schedule (or
+            # count the rejection) a second time.
+            return
+        if rs.stream_scheduled:
+            # Streaming path: the decode instance was chosen at first-chunk
+            # readiness and every chunk's bytes are already in (or through)
+            # the network — the final chunk's transfer was started by
+            # _on_chunk_done at this same instant.  A 100 % prefix hit
+            # never streams anything: admission is latency-only from here.
+            if rs.s_eff <= 0.0 and rs.stream_open == 0 and not rs.stream_last:
+                lat = self.tree.tier_latency[rs.tier]
+                self.loop.after(lat,
+                                lambda t, rs=rs: self._on_transfer_done(rs, None, t))
+            return
         if isinstance(self.sched, NetKVBatch) and self.sched.window > 0:
             self._batch_window.append((rs, rs.prefill_instance))
             if self._batch_timer is None:
@@ -237,14 +287,93 @@ class Simulation:
             return
         self._schedule_one(rs, now)
 
+    # ------------------------------------------------------- streamed chunks
+    def _on_chunk_done(self, rs: RequestState, tokens_ready: int, now: float) -> None:
+        """One prefill chunk's KV is ready (kv_streaming only): select the
+        decode instance on the first chunk, then stream each chunk's bytes
+        into the FlowPlane while later chunks are still prefilling."""
+        rs.tokens_ready = tokens_ready
+        if rs.rejected:
+            return
+        if not rs.stream_scheduled:
+            self._schedule_one(rs, now, streaming=True)
+            if not rs.stream_scheduled:
+                return          # rejected: remaining chunks prefill in vain
+        self._stream_chunks(rs, now)
+
+    def _stream_chunks(self, rs: RequestState, now: float) -> None:
+        """Hand every newly-ready, non-prefix-hit byte to the network.
+
+        Cumulative-fraction accounting: after k of the shippable tokens are
+        ready the total streamed bytes equal ``s_eff * k / ship_total``, so
+        per-chunk deltas telescope to *exactly* ``s_eff`` at the last chunk
+        (byte conservation, property-tested across mid-stream rewires).
+        """
+        if rs.s_eff <= 0.0:
+            return              # full prefix hit: nothing ever streams
+        req = rs.req
+        l = req.input_len
+        last = rs.tokens_ready >= l
+        hit = min(rs.hit_tokens, float(l))
+        ship_total = float(l) - hit
+        shipped = min(max(float(rs.tokens_ready) - hit, 0.0), ship_total)
+        cum = rs.s_eff if last else rs.s_eff * (shipped / ship_total)
+        delta = cum - rs.streamed_bytes
+        rs.streamed_bytes = cum
+        if last:
+            rs.stream_last = True
+        if delta > 0.0:
+            src = self._server_of[rs.prefill_instance]
+            dst = self._server_of[rs.decode_instance]
+            rs.stream_open += 1
+            tr = self.net.start_transfer(
+                src, dst, delta, now,
+                on_complete=lambda t, tt, rs=rs: self._on_chunk_transfer_done(rs, t, tt),
+                n_flows=self.cfg.tp,
+            )
+            self._inbound.setdefault(rs.decode_instance, []).append((rs, tr))
+            if not self.net.in_epoch:
+                self._reschedule_net(now)
+        elif last and rs.stream_open == 0:
+            # Degenerate: the tail rounded to zero bytes with nothing in
+            # flight — admission is latency-only, like a full hit.
+            lat = self.tree.tier_latency[rs.tier]
+            self.loop.after(lat, lambda t, rs=rs: self._on_transfer_done(rs, None, t))
+
+    def _on_chunk_transfer_done(self, rs: RequestState, transfer, now: float) -> None:
+        rs.stream_open -= 1
+        if rs.stream_last and rs.stream_open == 0:
+            # Last byte of the last chunk: admit through the usual
+            # epoch-batched completion path (which clears every _inbound
+            # entry of this request).
+            self._on_transfer_done(rs, transfer, now)
+            return
+        # Intermediate chunk landed: the entry deliberately STAYS in
+        # _inbound.  It is the fault path's only handle on a streamed
+        # request caught *between* chunk transfers (stream_open == 0, next
+        # chunk still prefilling) — kill_decode must cancel its stream and
+        # requeue it at fault time, not after the remaining chunks finish
+        # streaming to a dead instance.  Aborting an already-completed
+        # transfer is a no-op in both network engines.
+
     # ------------------------------------------------------------- scheduling
     def _fill_hits(self, req: Request) -> None:
         """Refresh the per-request hit_tokens scratch column in-place."""
         self.engine.fill_hits(req)
 
-    def _schedule_one(self, rs: RequestState, now: float) -> None:
+    def _schedule_one(self, rs: RequestState, now: float,
+                      streaming: bool = False) -> None:
         req = rs.req
         info = RequestInfo(req.request_id, req.input_len, rs.kv_bytes)
+        if streaming:
+            # Streamed-transfer information set (Eq. 3 extension): bytes
+            # keep becoming ready for prefill_remaining more seconds, and
+            # the final-chunk tail can only enter the network at the end —
+            # the ladder's T_xfer column credits the overlap accordingly.
+            info.prefill_remaining = self.cfg.prefill_model.c * max(
+                req.input_len - rs.tokens_ready, 0)
+            info.tail_bytes = rs.kv_bytes * (
+                min(self._chunk_eff, req.input_len) / req.input_len)
         self._fill_hits(req)
         view = self.oracle.view(now)
         if isinstance(self.sched, NetKVMultiHop):
@@ -257,7 +386,10 @@ class Simulation:
             rs.rejected = True
             self.rejected += 1
             return
-        self._dispatch(rs, decision, now)
+        if streaming:
+            self._dispatch_stream(rs, decision, now)
+        else:
+            self._dispatch(rs, decision, now)
 
     def _flush_batch(self, now: float) -> None:
         window, self._batch_window = self._batch_window, []
@@ -290,6 +422,17 @@ class Simulation:
         finally:
             self.net.end_epoch()
         self._reschedule_net(now)
+
+    def _dispatch_stream(self, rs: RequestState, decision, now: float) -> None:
+        """Streaming dispatch: commit the decode target and its memory at
+        first-chunk time; _stream_chunks moves the actual bytes."""
+        rs.sched_time = now
+        rs.decode_instance = decision.instance_id
+        rs.tier = decision.tier
+        rs.s_eff = decision.s_eff
+        rs.hit_tokens = self.engine.hit_tokens(decision.instance_id, rs.req)
+        self.engine.reserve(decision.instance_id, rs, now)
+        rs.stream_scheduled = True
 
     def _dispatch(self, rs: RequestState, decision, now: float) -> None:
         rs.sched_time = now
@@ -433,8 +576,13 @@ class Simulation:
     def _on_fault(self, f: FaultEvent, now: float) -> None:
         if f.kind == "kill_decode":
             victims = self.engine.fail(f.instance_id, now)
+            seen: set[int] = set()
             for rs, transfer in self._inbound.pop(f.instance_id, []):
                 self.net.abort_transfer(transfer, now)
+                if id(rs) in seen:
+                    continue  # one request, many flows (streamed chunks /
+                    #           staged legs): requeue + decrement once
+                seen.add(id(rs))
                 if self.sched.uses_self_contention:
                     self.inflight.decr(rs.prefill_instance, rs.tier)
                 victims.append(rs)
@@ -473,9 +621,23 @@ class Simulation:
         prefill in both cases (counts in ``requeues``).
         """
         rs.requeues += 1
+        if rs.prefill_instance >= 0:
+            # Streamed dispatch may die while chunks are still prefilling:
+            # drop any live chunk stream before re-running from scratch.
+            # Unconditional on purpose — ``prefill_end`` may hold a *stale*
+            # earlier attempt's finish time while the current attempt is
+            # mid-prefill; cancel is a no-op when no stream is live.
+            self.engine.cancel_prefill(rs)
         rs.decode_instance = -1
         rs.tokens_out = 0
         rs.transfer_end = -1.0
+        rs.prefill_end = -1.0  # the fresh attempt re-runs prefill in full
+        # Streaming bookkeeping restarts with the fresh prefill attempt.
+        rs.tokens_ready = 0
+        rs.streamed_bytes = 0.0
+        rs.stream_open = 0
+        rs.stream_scheduled = False
+        rs.stream_last = False
         # Clear every per-attempt field from the failed attempt: a stale
         # first_token/admit_time would report a phantom TTFT for a request
         # that never decoded, and stale tier/s_eff/hit_tokens would skew the
