@@ -1,0 +1,128 @@
+"""Beyond-paper experiment 11: ScenarioPlane fleet-scale what-if sweeps.
+
+A chunk-size × NIC-policy × scheduler × seed grid (36 cells in quick mode,
+54 full) runs as **one** batched jitted program via
+``sim.scenarios.ScenarioPlane`` and is raced against the serial event-loop
+simulator on a subset of the same cells.  Reported:
+
+* per-scenario TTFT/TBT/SLO/goodput rows (the what-if table itself);
+* ``batched_sps`` — steady-state scenarios/s of the re-invoked jitted
+  sweep (compile time reported separately, amortised across every grid
+  this session runs);
+* ``serial_sps`` — scenarios/s of ``run_sim`` on the baseline subset.
+
+Acceptance gate (CI): ``batched_sps >= SWEEP_FLOOR * serial_sps``.  The
+fluid sweep is a *ranking* model — the event loop stays the ground truth
+for absolute paper numbers (see ``sim/scenarios.py``'s modelling
+contract) — so the gate is purely about sweep throughput.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.jaxutil import enable_f64
+from repro.sim import ScenarioPlane, ScenarioSpec, SimConfig, run_sim
+from repro.traces import generate_trace
+
+from .common import emit, write_csv
+
+SCHEDULERS = ["cla", "netkv-static", "netkv-full"]
+CHUNKS = [None, 256, 1024]          # None = serial whole-request prefill
+NIC_POLICIES = ["hash", "rail-affine"]
+SWEEP_FLOOR = 5.0                   # batched_sps >= 5x serial_sps (CI gate)
+SERIAL_CELLS = 4                    # event-loop baseline subset size
+
+QUICK = dict(warmup=1.0, measure=4.0, drain=3.0, rps=10.0, seeds=2)
+FULL = dict(warmup=2.0, measure=8.0, drain=4.0, rps=12.0, seeds=3)
+
+
+def _grid(k) -> list[ScenarioSpec]:
+    specs = []
+    for sched in SCHEDULERS:
+        for chunk in CHUNKS:
+            for nic in NIC_POLICIES:
+                for seed in range(k["seeds"]):
+                    specs.append(ScenarioSpec(
+                        seed=seed, scheduler=sched, target_rps=k["rps"],
+                        warmup=k["warmup"], measure=k["measure"],
+                        drain=k["drain"], chunk_tokens=chunk,
+                        kv_streaming=chunk is not None, nic_policy=nic,
+                        background=0.25))
+    return specs
+
+
+def _serial_baseline(specs, k) -> float:
+    """Wall-clock of the event loop over a subset of the same grid cells."""
+    subset = specs[:: max(len(specs) // SERIAL_CELLS, 1)][:SERIAL_CELLS]
+    t0 = time.perf_counter()
+    for sp in subset:
+        cfg = SimConfig(
+            scheduler=sp.scheduler, seed=sp.seed, warmup=sp.warmup,
+            measure=sp.measure, chunk_tokens=sp.chunk_tokens,
+            kv_streaming=sp.kv_streaming, nic_policy=sp.nic_policy,
+            background=sp.background)
+        trace = generate_trace(sp.profile, duration=sp.duration,
+                               target_rps=sp.target_rps, seed=sp.seed)
+        run_sim(cfg, trace)
+    return len(subset) / (time.perf_counter() - t0)
+
+
+def run(quick: bool = False):
+    enable_f64()
+    k = QUICK if quick else FULL
+    specs = _grid(k)
+    assert len(specs) >= 32, "grid must batch >= 32 scenarios"
+
+    t0 = time.perf_counter()
+    plane = ScenarioPlane(specs, dt=0.01)
+    t_prep = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = plane.sweep()                       # compile + first run
+    t_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = plane.sweep()                       # steady state (cached jit)
+    t_steady = time.perf_counter() - t0
+    batched_sps = len(specs) / t_steady
+
+    serial_sps = _serial_baseline(specs, k)
+    speedup = batched_sps / serial_sps
+
+    rows = []
+    for i, sp in enumerate(specs):
+        rows.append(dict(
+            scheduler=sp.scheduler, chunk=sp.chunk_tokens or 0,
+            nic_policy=sp.nic_policy, seed=sp.seed,
+            n_measured=int(out["n_measured"][i]),
+            n_served=int(out["n_served"][i]),
+            ttft_mean=float(out["ttft_mean"][i]),
+            ttft_p95=float(out["ttft_p95"][i]),
+            tbt_mean=float(out["tbt_mean"][i]),
+            slo_attainment=float(out["slo_attainment"][i]),
+            goodput_rps=float(out["goodput_rps"][i]),
+            batched_sps=batched_sps, serial_sps=serial_sps,
+            sweep_speedup=speedup))
+    write_csv("exp11_scenario_sweep", rows)
+    print(f"  exp11: {len(specs)} scenarios in one program | "
+          f"prep={t_prep:.2f}s compile={t_compile:.2f}s "
+          f"steady={t_steady:.2f}s -> {batched_sps:.1f} scn/s "
+          f"vs serial {serial_sps:.2f} scn/s ({speedup:.1f}x)")
+    assert speedup >= SWEEP_FLOOR, (
+        f"batched sweep {batched_sps:.1f} scn/s is only {speedup:.1f}x the "
+        f"serial event loop ({serial_sps:.2f} scn/s); floor is "
+        f"{SWEEP_FLOOR:.0f}x")
+    return rows, batched_sps, serial_sps, speedup
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows, batched_sps, serial_sps, speedup = run(quick)
+    emit("exp11_scenario_sweep", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"scenarios={len(rows)};batched={batched_sps:.1f}scn_s;"
+         f"serial={serial_sps:.2f}scn_s;speedup={speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

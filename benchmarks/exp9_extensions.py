@@ -77,6 +77,24 @@ def run(quick: bool = False) -> list[dict]:
     for sched in SCHEDULERS:
         point(f"ocs-{sched}", sched, {"rewires": ocs},
               axis="ocs", nics=1, nic_policy="hash", rewired=1)
+        # Rewire-notified arm: the oracle force-refreshes on each
+        # topo_epoch bump instead of routing on pre-rewire bandwidths
+        # until its next scheduled refresh.  Both it and its stale control
+        # run with a widened refresh interval — at the default 1 s the
+        # staleness window is shorter than the decision cadence and the
+        # two arms coincide.  Quick mode keeps one notified arm (the
+        # network-aware scheduler).
+        if not quick:
+            point(f"ocs-stale-{sched}", sched,
+                  {"rewires": ocs, "oracle_refresh": 4.0},
+                  axis="ocs", nics=1, nic_policy="hash", rewired=1,
+                  notified=0)
+        if not quick or sched == "netkv-full":
+            point(f"ocs-notified-{sched}", sched,
+                  {"rewires": ocs, "notify_rewires": True,
+                   "oracle_refresh": 4.0},
+                  axis="ocs", nics=1, nic_policy="hash", rewired=1,
+                  notified=1)
         if not quick:  # static-fabric control arm
             point(f"ocs-control-{sched}", sched, {},
                   axis="ocs", nics=1, nic_policy="hash", rewired=0)

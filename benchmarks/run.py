@@ -26,6 +26,7 @@ from . import (
     exp8_beyond,
     exp9_extensions,
     exp10_chunked_prefill,
+    exp11_scenario_sweep,
     net_throughput,
     roofline,
     sched_latency,
@@ -42,6 +43,7 @@ HARNESSES = {
     "exp8": exp8_beyond,           # beyond-paper
     "exp9": exp9_extensions,       # beyond-paper: TopoPlane (multi-NIC + OCS rewire)
     "exp10": exp10_chunked_prefill,  # beyond-paper: ChunkPlane (chunked prefill + streamed KV)
+    "exp11": exp11_scenario_sweep,   # beyond-paper: ScenarioPlane batched what-if sweeps
     "sched_latency": sched_latency,
     "net_throughput": net_throughput,      # FlowPlane vs reference engine
     "decode_throughput": decode_throughput,  # InstancePlane vs reference

@@ -154,7 +154,13 @@ class FlowPlane:
         self._link_nflows = np.zeros(tree.n_links + 1, np.int64)
         # ---- residual capacity plane (piecewise-constant bg sampling) ----
         self._resid_caps = np.empty(tree.n_links + 1, np.float64)
+        self._bg_time = 0.0
         self._sample_background(0.0)
+        # Optional water-filling instrumentation: when a list, every
+        # recompute appends its per-round (bottleneck link id, share)
+        # sequence — the oracle trace the jitted solver
+        # (``kernels.waterfill``) must reproduce exactly.
+        self._wf_trace: list[tuple[int, float]] | None = None
 
     # ------------------------------------------------------------- internals
     def _sample_background(self, now: float) -> None:
@@ -162,6 +168,7 @@ class FlowPlane:
         u = np.array([self.bg.util(t, now) for t in range(4)], np.float64)
         self._resid_caps[:-1] = self.tree.link_capacity * (1.0 - u[self.tree.link_tier])
         self._resid_caps[-1] = np.inf
+        self._bg_time = now
 
     def _ordered_slots(self) -> np.ndarray:
         return np.fromiter(self._slot_order, np.intp, len(self._slot_order))
@@ -377,6 +384,32 @@ class FlowPlane:
             raise RuntimeError("cannot rewire inside an open arrival epoch")
         self.refresh_rates(now)
 
+    def on_rewire_links(self, link_ids, now: float) -> None:
+        """Per-link capacity retarget (``FatTree.rewire_links``): refresh
+        only the touched links' residuals and re-water-fill their dirty
+        component.
+
+        Unlike the tier-level :meth:`on_rewire`, a per-link edit provably
+        cannot move any rate outside the connected component of flows
+        crossing the edited links (max-min decomposes over link-disjoint
+        components), so the full refresh pass is skipped.  The residual is
+        rebuilt with the background utilisation as of the *last sample
+        tick* (``_bg_time``), keeping the piecewise-constant sampling
+        contract: all other links' residuals stay untouched between ticks.
+        """
+        if self._epoch_dirty is not None:
+            raise RuntimeError("cannot rewire inside an open arrival epoch")
+        self.advance(now)
+        lids = np.unique(np.asarray(link_ids, np.int64).ravel())
+        if lids.size == 0:
+            return
+        u = np.array([self.bg.util(t, self._bg_time) for t in range(4)],
+                     np.float64)
+        tiers = self.tree.link_tier[lids]
+        self._resid_caps[lids] = self.tree.link_capacity[lids] * (1.0 - u[tiers])
+        if self._slot_order:
+            self._recompute_rates(dirty_links=lids)
+
     # -------------------------------------------------------- water-filling
     def _recompute_rates(self, dirty_links: np.ndarray | None = None) -> None:
         """Vectorised progressive water-filling (max-min fair sharing).
@@ -445,6 +478,8 @@ class FlowPlane:
             if share == np.inf:  # pragma: no cover - every flow has links
                 rates[unfixed] = np.inf
                 break
+            if self._wf_trace is not None:
+                self._wf_trace.append((int(perm[lid]), float(share)))
             rows = csr_rows[csr_start[lid]:csr_start[lid + 1]]
             fixed_rows = rows[unfixed[rows]]         # flow-creation order
             rates[fixed_rows] = share

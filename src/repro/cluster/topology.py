@@ -339,12 +339,59 @@ class FatTree:
         if scale:
             for t, f in scale.items():
                 self.tier_bandwidth[int(t)] = self.tier_bandwidth[int(t)] * float(f)
+        touched = set()
+        for m in (tier_bandwidth, scale):
+            if m:
+                touched |= {int(t) for t in m}
+        if not touched:
+            touched = set(range(4))
+        # Only links of touched tiers are rewritten: a tier-level swap must
+        # not clobber per-link ``rewire_links`` edits elsewhere.  (For
+        # untouched tiers the old full rebuild recomputed the same values,
+        # so this is bit-identical absent per-link edits.)
         caps = np.array([self.tier_bandwidth[t] for t in range(4)], np.float64)
-        self.link_capacity = caps[self.link_tier]
-        self.links = [
-            dataclasses.replace(l, capacity=float(self.link_capacity[l.link_id]))
-            for l in self.links
-        ]
+        mask = np.isin(self.link_tier, sorted(touched))
+        self.link_capacity[mask] = caps[self.link_tier[mask]]
+        for lid in np.flatnonzero(mask).tolist():
+            self.links[lid] = dataclasses.replace(
+                self.links[lid], capacity=float(self.link_capacity[lid]))
+        self.topo_epoch += 1
+        return self.topo_epoch
+
+    def rewire_links(self, link_ids, capacity) -> int:
+        """Retarget *individual* links' capacities (per-link OCS edit).
+
+        ``capacity`` is a scalar or per-link array of bytes/s applied to
+        ``link_ids``.  The columnar ``link_capacity`` table and the
+        per-object ``Link`` records are both updated, and
+        ``tier_bandwidth`` is refreshed as a **derived p50-per-tier
+        summary** of the per-link table — mutated in place, because the
+        ``NetworkCostOracle`` holds a live reference to this dict — so
+        tier-granular consumers (cost model Eq. (3), staleness snapshots)
+        keep a representative figure while the flow simulator sees exact
+        per-link values.  Callers owning in-flight flows must follow with
+        ``FlowPlane.on_rewire_links(link_ids, now)``, which re-water-fills
+        only the dirty component of the edited links.  Note a subsequent
+        tier-level :meth:`rewire` of the same tier resets its per-link
+        edits (it reasserts one capacity per tier).  Returns the new
+        ``topo_epoch``.
+        """
+        lids = np.asarray(link_ids, np.int64).ravel()
+        if lids.size == 0:
+            return self.topo_epoch
+        if np.any((lids < 0) | (lids >= self.n_links)):
+            raise IndexError("link id out of range")
+        caps = np.broadcast_to(np.asarray(capacity, np.float64), lids.shape)
+        if np.any(~np.isfinite(caps)) or np.any(caps <= 0):
+            raise ValueError("link capacity must be finite and > 0")
+        self.link_capacity[lids] = caps
+        for lid, c in zip(lids.tolist(), caps.tolist()):
+            self.links[lid] = dataclasses.replace(self.links[lid],
+                                                  capacity=float(c))
+        for t in np.unique(self.link_tier[lids]).tolist():
+            sel = self.link_tier == t
+            self.tier_bandwidth[int(t)] = float(
+                np.median(self.link_capacity[sel]))
         self.topo_epoch += 1
         return self.topo_epoch
 

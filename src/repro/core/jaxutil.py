@@ -1,0 +1,31 @@
+"""Shared JAX configuration guards.
+
+The fused scenario engine's bit-exactness claims (water-filling and cohort
+step vs their NumPy planes) hold only under double precision; JAX defaults
+to f32 unless ``jax_enable_x64`` is flipped *before* the arrays involved are
+created.  Tests, benchmarks and ``sim/scenarios.py`` all route through
+:func:`enable_f64` so the flag is set exactly once, idempotently, and there
+is a single place asserting it actually took (guarding against an import
+that raced a traced function).
+"""
+
+from __future__ import annotations
+
+_enabled = False
+
+
+def enable_f64() -> None:
+    """Idempotently enable 64-bit JAX types (safe to call repeatedly)."""
+    global _enabled
+    if _enabled:
+        return
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    _enabled = True
+
+
+def f64_enabled() -> bool:
+    import jax
+
+    return bool(jax.config.jax_enable_x64)

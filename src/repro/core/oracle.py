@@ -184,6 +184,17 @@ class NetworkCostOracle:
             self.refreshes += 1
         return self._snapshot
 
+    def force_refresh(self, now: float) -> "OracleView":
+        """Out-of-band refresh: drop the snapshot and rebuild immediately.
+
+        The rewire-notification path (``SimConfig.notify_rewires``): an OCS
+        controller that *tells* the operator it moved capacity, instead of
+        letting the scheduler route on a stale pre-rewire snapshot until the
+        periodic interval elapses.  Counts as a normal refresh.
+        """
+        self._snapshot = None
+        return self.view(now)
+
     def submit_intent(self, intent: TransferIntent) -> None:
         self.intents.append(intent)
 

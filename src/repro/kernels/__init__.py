@@ -5,9 +5,15 @@
   kv_unpack     decode-side scatter back into the page pool
   netkv_score   Algorithm 1 scoring + masked argmin, fused
   rwkv_scan     chunked WKV-6 recurrence with VMEM-resident state
+  waterfill     FlowPlane's max-min fixed point as a jitted while_loop
+                (Pallas share/argmin inner reduction; f64 jax path is
+                bit-exact vs the NumPy plane)
 """
 
 from . import ops, ref
 from .ops import flash_decode, kv_pack, kv_unpack, netkv_score, rwkv_scan
+from .waterfill import waterfill_fixed_point, waterfill_rates, waterfill_rates_fast
 
-__all__ = ["ops", "ref", "flash_decode", "kv_pack", "kv_unpack", "netkv_score", "rwkv_scan"]
+__all__ = ["ops", "ref", "flash_decode", "kv_pack", "kv_unpack", "netkv_score",
+           "rwkv_scan", "waterfill_fixed_point", "waterfill_rates",
+           "waterfill_rates_fast"]

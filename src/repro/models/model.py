@@ -483,17 +483,24 @@ def _period_decode(cfg, period_params, x, cache, pos, cross_params=None, memory=
                                            k_new=k, v_new=v)
                 new_cache[f"kf{i}"], new_cache[f"vf{i}"] = k, v
             elif per_slot:
+                # Indices must share one dtype: literal 0s widen to int64
+                # when x64 is enabled while pos stays int32.
                 upd = jax.vmap(
-                    lambda c, kv, pp: jax.lax.dynamic_update_slice(c, kv, (pp, 0, 0))
+                    lambda c, kv, pp: jax.lax.dynamic_update_slice(
+                        c, kv, (pp, jnp.zeros_like(pp), jnp.zeros_like(pp)))
                 )
                 k_cache = upd(cache[f"k{i}"], k.astype(cache[f"k{i}"].dtype), pos)
                 v_cache = upd(cache[f"v{i}"], v.astype(cache[f"v{i}"].dtype), pos)
                 valid_len = (pos + 1)[:, None, None, None]
             else:
+                posi = jnp.asarray(pos)
+                z = jnp.zeros((), posi.dtype)
                 k_cache = jax.lax.dynamic_update_slice(
-                    cache[f"k{i}"], k.astype(cache[f"k{i}"].dtype), (0, pos, 0, 0))
+                    cache[f"k{i}"], k.astype(cache[f"k{i}"].dtype),
+                    (z, posi, z, z))
                 v_cache = jax.lax.dynamic_update_slice(
-                    cache[f"v{i}"], v.astype(cache[f"v{i}"].dtype), (0, pos, 0, 0))
+                    cache[f"v{i}"], v.astype(cache[f"v{i}"].dtype),
+                    (z, posi, z, z))
                 valid_len = pos + 1
             if update_cache:
                 att = decode_attention(q, k_cache, v_cache, valid_len)

@@ -9,6 +9,7 @@ from .reference import (
     ChunkedPrefillSim, DecodeSim, PrefillSim, ReferenceInstanceEngine,
 )
 from .metrics import RunMetrics, aggregate_seeds, summarize
+from .scenarios import ScenarioPlane, ScenarioSpec, cohort_step, cohort_step_jit
 from .simulator import FaultEvent, RewireEvent, SimConfig, Simulation, run_sim
 
 __all__ = [
@@ -16,5 +17,6 @@ __all__ = [
     "ChunkPlane", "InstancePlane", "DecodeHandle", "PrefillHandle",
     "ChunkedPrefillSim", "DecodeSim", "PrefillSim", "ReferenceInstanceEngine",
     "RequestState", "RunMetrics", "aggregate_seeds", "summarize",
+    "ScenarioPlane", "ScenarioSpec", "cohort_step", "cohort_step_jit",
     "FaultEvent", "RewireEvent", "SimConfig", "Simulation", "run_sim",
 ]

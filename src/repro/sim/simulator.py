@@ -129,6 +129,12 @@ class SimConfig:
     # faults / elasticity / topology dynamics
     faults: Sequence[FaultEvent] = ()
     rewires: Sequence[RewireEvent] = ()     # OCS capacity timeline
+    # Rewire notifications: when True every RewireEvent also forces an
+    # out-of-band oracle refresh at the reconfiguration instant, so the
+    # scheduler prices the new capacities immediately instead of riding
+    # the stale snapshot until the periodic refresh (exp9's
+    # notified-vs-stale arms).
+    notify_rewires: bool = False
     net_tick: float = 0.1                   # rate refresh for wandering bg
     staging_capacity: float = 512e9         # per-pod DRAM KV store (multihop)
 
@@ -566,10 +572,14 @@ class Simulation:
     def _on_rewire(self, rw: RewireEvent, now: float) -> None:
         """OCS reconfiguration fires: swap capacities, re-water-fill, and
         re-arm the completion timer (every in-flight ETA just moved).  The
-        oracle is *not* poked — the scheduler keeps its stale pre-rewire
-        snapshot until the next refresh interval elapses."""
+        oracle is *not* poked unless ``notify_rewires`` is set — by default
+        the scheduler keeps its stale pre-rewire snapshot until the next
+        refresh interval elapses; with notifications it refreshes at the
+        reconfiguration instant."""
         self.tree.rewire(tier_bandwidth=rw.tier_bandwidth, scale=rw.scale)
         self.net.on_rewire(now)
+        if self.cfg.notify_rewires:
+            self.oracle.force_refresh(now)
         self._reschedule_net(now)
 
     # ------------------------------------------------------ faults/elasticity

@@ -1,0 +1,468 @@
+"""ScenarioPlane parity and invariants: the jitted solvers vs their planes.
+
+Three bit-exactness contracts (the ScenarioPlane's foundation):
+
+* ``kernels.waterfill`` reproduces ``FlowPlane._recompute_rates`` — rates
+  *and* the per-round bottleneck (link, share) trace — bit-for-bit under
+  f64, on live FlowPlane states and on randomized flow tables (against an
+  inline NumPy port of the plane's algorithm);
+* ``sim.scenarios.cohort_step`` (``exact_clamp=True``) reproduces
+  ``InstancePlane._step_rows_vector``'s token/finish/KV columns bit-for-bit
+  on seeded 64- and 256-GPU event-loop drives (monkeypatched shadow check
+  at every vectorised cohort step);
+* batched ``ScenarioPlane.sweep`` row ``i`` is bit-identical to a solo run
+  of scenario ``i`` at the same padding (vmap consistency).
+
+The Pallas backend (f32 inner reduction) is tolerance-tested, never the
+oracle.  Property-test variants ride through ``hypothesis_compat`` and
+skip cleanly where hypothesis is absent; the plain seeded tests carry the
+same coverage regardless.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.jaxutil import enable_f64, f64_enabled
+from repro.cluster import BackgroundTraffic, FatTree, FlowPlane
+from repro.kernels import waterfill_rates, waterfill_rates_fast
+from repro.sim import ScenarioPlane, ScenarioSpec, cohort_step_jit
+from repro.sim.instances import InstancePlane
+from repro.sim.simulator import SimConfig, Simulation
+from repro.traces.mooncake import generate_trace
+
+TREE_64 = dict(n_pods=2, racks_per_pod=2, servers_per_rack=2, gpus_per_server=8)
+
+
+# ------------------------------------------------------------------ helpers
+def _servers(kw):
+    return [
+        (p, r, s)
+        for p in range(kw["n_pods"])
+        for r in range(kw["racks_per_pod"])
+        for s in range(kw["servers_per_rack"])
+    ]
+
+
+def _loaded_plane(seed, n_transfers=40, bg=0.2, nic_policy="hash",
+                  tree_kw=TREE_64, nics=2):
+    """A FlowPlane mid-drive with ``n_transfers`` in-flight transfers."""
+    tree = FatTree(**tree_kw, nics_per_server=nics)
+    plane = FlowPlane(tree, BackgroundTraffic(bg), seed=seed,
+                      nic_policy=nic_policy)
+    rng = np.random.default_rng(seed + 7)
+    servers = _servers(tree_kw)
+    now = 0.0
+    for _ in range(n_transfers):
+        now += float(rng.exponential(0.002))
+        i, j = rng.choice(len(servers), 2, replace=False)
+        plane.start_transfer(servers[i], servers[j],
+                             float(rng.uniform(1e7, 5e8)), now,
+                             on_complete=lambda t, tt: None, n_flows=4)
+    return plane, now
+
+
+def _np_waterfill(paths, caps, active):
+    """Inline NumPy port of ``FlowPlane._recompute_rates``'s fixed point
+    (full-recompute path) — the second, independent parity oracle for
+    randomized tables."""
+    lp1 = caps.shape[0]
+    pad = lp1 - 1
+    P = np.where(active[:, None], paths, pad).astype(np.int64)
+    flat = P.ravel()
+    enc = np.full(lp1, flat.size + 1, np.int64)
+    np.minimum.at(enc, flat, np.arange(flat.size))
+    perm = np.argsort(enc, kind="stable")
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(lp1)
+    P = inv[P]
+    counts = np.bincount(P.ravel(), minlength=lp1)
+    counts[inv[pad]] = 0
+    caps_p = caps[perm].copy()
+    rates = np.zeros(len(P), np.float64)
+    unfixed = active.copy()
+    trace = []
+    while unfixed.any():
+        shares = np.full(lp1, np.inf)
+        np.divide(caps_p, counts, out=shares, where=counts > 0)
+        lid = int(np.argmin(shares))
+        share = shares[lid]
+        if share == np.inf:
+            rates[unfixed] = np.inf
+            break
+        trace.append((int(perm[lid]), float(share)))
+        rows = np.flatnonzero(unfixed & (P == lid).any(axis=1))
+        rates[rows] = share
+        idx = P[rows].ravel()
+        np.subtract.at(caps_p, idx, share)
+        np.maximum(caps_p, 0.0, out=caps_p)
+        np.subtract.at(counts, idx, 1)
+        unfixed[rows] = False
+    return rates, trace
+
+
+def _random_table(seed):
+    rng = np.random.default_rng(seed)
+    n_links = int(rng.integers(4, 28))
+    n_flows = int(rng.integers(1, 40))
+    h = int(rng.integers(2, 7))
+    caps = np.append(rng.uniform(1e7, 1e9, n_links), np.inf)
+    paths = np.full((n_flows, h), n_links, np.int32)
+    for f in range(n_flows):
+        plen = int(rng.integers(1, min(h, n_links) + 1))
+        paths[f, :plen] = rng.choice(n_links, plen, replace=False)
+    active = rng.random(n_flows) < 0.85
+    return paths, caps, active
+
+
+def _check_waterfill_invariants(paths, caps, active, rates, trace):
+    """Max-min structural invariants (the property-test contract)."""
+    pad = caps.shape[0] - 1
+    rates = np.asarray(rates)
+    assert np.all(rates >= 0.0)
+    assert np.all(rates[~active] == 0.0)
+    load = np.zeros(caps.shape[0])
+    for f in np.flatnonzero(active):
+        for l in set(int(x) for x in paths[f] if x != pad):
+            load[l] += rates[f]
+    # Byte conservation: no link carries more than its residual capacity.
+    assert np.all(load[:pad] <= caps[:pad] * (1 + 1e-9) + 1e-6)
+    # Max-min: every active flow crosses >= 1 saturated link.
+    for f in np.flatnonzero(active):
+        links = [int(x) for x in paths[f] if x != pad]
+        assert any(load[l] >= caps[l] * (1 - 1e-9) - 1e-6 for l in links), f
+    # Progressive filling: bottleneck shares are non-decreasing.
+    shares = [s for _, s in trace]
+    assert all(a <= b * (1 + 1e-12) for a, b in zip(shares, shares[1:]))
+
+
+# ------------------------------------------------------ f64 guard
+class TestF64Guard:
+    def test_enable_is_idempotent_and_sticky(self):
+        import jax.numpy as jnp
+
+        enable_f64()
+        enable_f64()
+        assert f64_enabled()
+        assert jnp.zeros(1, jnp.float64).dtype == jnp.float64
+        assert jnp.asarray(np.float64(1.5)).dtype == jnp.float64
+
+
+# ------------------------------------------------- waterfill vs FlowPlane
+class TestWaterfillFlowPlaneParity:
+    @pytest.mark.parametrize("seed,nic", [(0, "hash"), (1, "rail-affine")])
+    def test_rates_and_trace_bit_exact(self, seed, nic):
+        plane, now = _loaded_plane(seed, nic_policy=nic)
+        plane._wf_trace = []
+        plane.refresh_rates(now)  # full recompute + trace
+        slots = plane._ordered_slots()
+        paths = plane.f_path[slots].astype(np.int32)
+        caps = plane._resid_caps.copy()
+        rates, tl, ts, r = waterfill_rates(paths, caps, backend="jax")
+        assert np.array_equal(np.asarray(rates), plane.f_rate[slots])
+        r = int(r)
+        assert r == len(plane._wf_trace)
+        ref_links = [l for l, _ in plane._wf_trace]
+        ref_shares = np.array([s for _, s in plane._wf_trace])
+        assert np.asarray(tl)[:r].tolist() == ref_links
+        assert np.array_equal(np.asarray(ts)[:r], ref_shares)
+
+    def test_inactive_rows_inert(self):
+        plane, now = _loaded_plane(3)
+        plane.refresh_rates(now)
+        slots = plane._ordered_slots()
+        paths = plane.f_path[slots].astype(np.int32)
+        caps = plane._resid_caps.copy()
+        # Append garbage rows masked inactive: identical result, zero rates.
+        junk = np.tile(paths[:1], (5, 1))
+        paths_pad = np.concatenate([paths, junk])
+        active = np.append(np.ones(len(slots), bool), np.zeros(5, bool))
+        rates, _, _, _ = waterfill_rates(paths_pad, caps, active,
+                                         backend="jax")
+        rates = np.asarray(rates)
+        assert np.array_equal(rates[: len(slots)], plane.f_rate[slots])
+        assert np.all(rates[len(slots):] == 0.0)
+
+    def test_pallas_backend_close(self):
+        plane, now = _loaded_plane(5)
+        plane.refresh_rates(now)
+        slots = plane._ordered_slots()
+        paths = plane.f_path[slots].astype(np.int32)
+        caps = plane._resid_caps.copy()
+        rates, _, _, _ = waterfill_rates(paths, caps, backend="pallas")
+        ref = plane.f_rate[slots]
+        assert np.allclose(np.asarray(rates, np.float64), ref, rtol=1e-4)
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError):
+            waterfill_rates(np.zeros((1, 2), np.int32),
+                            np.array([1.0, np.inf]), backend="numpy")
+
+
+# --------------------------------------------- waterfill randomized tables
+class TestWaterfillRandomTables:
+    def _one(self, seed):
+        paths, caps, active = _random_table(seed)
+        ref_rates, ref_trace = _np_waterfill(paths, caps, active)
+        rates, tl, ts, r = waterfill_rates(paths, caps, active,
+                                           backend="jax")
+        rates = np.asarray(rates)
+        assert np.array_equal(rates, ref_rates)
+        r = int(r)
+        assert np.asarray(tl)[:r].tolist() == [l for l, _ in ref_trace]
+        assert np.array_equal(np.asarray(ts)[:r],
+                              np.array([s for _, s in ref_trace]))
+        _check_waterfill_invariants(paths, caps, active, rates, ref_trace)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_parity_and_invariants_seeded(self, seed):
+        self._one(seed)
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_parity_and_invariants_property(self, seed):
+        self._one(seed)
+
+
+# -------------------------------------- parallel-bottleneck fast solver
+class TestWaterfillFastSolver:
+    """``waterfill_rates_fast`` fixes every level bottleneck per round
+    instead of one; the max-min allocation is unique, so it must agree
+    with the progressive reference up to residual-subtraction rounding."""
+
+    @staticmethod
+    def _nhops(paths, caps):
+        lp1 = caps.shape[0]
+        nh = np.zeros((paths.shape[0], lp1))
+        for f in range(paths.shape[0]):
+            for link in paths[f]:
+                nh[f, int(link)] += 1
+        nh[:, lp1 - 1] = 0.0
+        return nh
+
+    def _one(self, seed):
+        paths, caps, active = _random_table(seed)
+        ref_rates, ref_trace = _np_waterfill(paths, caps, active)
+        fast = np.asarray(waterfill_rates_fast(paths, caps, active))
+        np.testing.assert_allclose(fast, ref_rates, rtol=1e-9, atol=1e-6)
+        _check_waterfill_invariants(paths, caps, active, fast, ref_trace)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_matches_progressive_seeded(self, seed):
+        self._one(seed)
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_progressive_property(self, seed):
+        self._one(seed)
+
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_precomputed_incidence_matches_paths_form(self, seed):
+        """The ScenarioPlane's gather path (``nhops=``) is bitwise the
+        same program as the one-hot build from ``paths``."""
+        paths, caps, active = _random_table(seed)
+        a = np.asarray(waterfill_rates_fast(paths, caps, active))
+        nh = self._nhops(paths, caps)
+        b = np.asarray(waterfill_rates_fast(None, caps, active, nhops=nh))
+        assert np.array_equal(a, b)
+
+
+# --------------------------------------------------------- cohort step unit
+class TestCohortStepUnit:
+    def _mk(self, seed, rows=64, k=6):
+        rng = np.random.default_rng(seed)
+        import jax.numpy as jnp
+
+        tokens = jnp.asarray(rng.integers(0, 9, rows))
+        out_len = jnp.asarray(rng.integers(1, 10, rows))
+        inst = jnp.asarray(rng.integers(0, k, rows))
+        seq = jnp.asarray(np.arange(rows, dtype=np.int64))
+        grown = jnp.asarray(rng.uniform(0.0, 4e8, rows))
+        live = jnp.asarray(rng.random(rows) < 0.8)
+        cohort = jnp.asarray(rng.random(k) < 0.7)
+        pinned = jnp.asarray(np.append(rng.uniform(0.0, 1e9, k), 0.0))
+        return tokens, out_len, inst, seq, grown, live, cohort, pinned
+
+    def test_exact_matches_numpy_sequential(self):
+        """exact_clamp reproduces the per-(inst, seq) sequential clamp the
+        NumPy plane applies, bit-for-bit."""
+        for seed in range(6):
+            args = self._mk(seed)
+            tokens, out_len, inst, seq, grown, live, cohort, pinned = (
+                np.asarray(a) for a in args)
+            t2, l2, p2, first, fin, fpi = cohort_step_jit(
+                *args, kv_per_token=1e5, exact_clamp=True)
+            # NumPy shadow.
+            rows = live & cohort[np.clip(inst, 0, len(cohort) - 1)]
+            toks = np.where(rows, tokens + 1, tokens)
+            pin = pinned.copy()
+            for i in np.flatnonzero(rows):
+                pin[inst[i]] += 1e5
+            fin_ref = rows & (toks >= out_len)
+            order = np.lexsort((seq, inst))
+            for i in order:
+                if fin_ref[i]:
+                    pin[inst[i]] = max(0.0, pin[inst[i]] - grown[i])
+            assert np.array_equal(np.asarray(t2), toks)
+            assert np.array_equal(np.asarray(l2), live & ~fin_ref)
+            assert np.array_equal(np.asarray(p2)[:-1], pin[:-1])
+            assert np.array_equal(np.asarray(fin), fin_ref)
+            assert np.array_equal(np.asarray(first), rows & (toks == 1))
+            k = len(cohort)
+            fpi_ref = np.bincount(inst[fin_ref], minlength=k)
+            assert np.array_equal(np.asarray(fpi), fpi_ref)
+
+    def test_fused_clamp_close_to_exact(self):
+        for seed in range(4):
+            args = self._mk(seed)
+            _, _, p_exact, *_ = cohort_step_jit(*args, kv_per_token=1e5,
+                                                exact_clamp=True)
+            _, _, p_fused, *_ = cohort_step_jit(*args, kv_per_token=1e5,
+                                                exact_clamp=False)
+            # Real instance slots only: the pad accumulator diverges by
+            # design (exact routes non-finishers there as no-ops, fused
+            # clamps it), and nothing ever reads it.
+            assert np.allclose(np.asarray(p_exact)[:-1],
+                               np.asarray(p_fused)[:-1],
+                               rtol=1e-12, atol=1.0)
+
+
+# ----------------------------------------- cohort step vs InstancePlane
+def _pow2(n):
+    p = 64
+    while p < n:
+        p *= 2
+    return p
+
+
+def _drive_cohort_parity(cfg_kw, trace_kw, drain):
+    """Run the event loop with every vectorised cohort step shadowed by
+    the jitted cohort_step (exact_clamp): tokens/live/pinned columns must
+    match bit-for-bit after each step."""
+    import jax.numpy as jnp
+
+    calls = [0]
+    orig = InstancePlane._step_rows_vector
+
+    def wrapper(self, cohort, now):
+        hi, n = self._r_hi, self.n_dec
+        kpt = float(self.kv_per_token)
+        R = _pow2(hi)  # pow2 padding bounds jit recompiles as hi grows
+        grown = np.zeros(R, np.float64)
+        for r in range(hi):
+            if self.r_live[r]:
+                rs = self.r_obj[r]
+                grown[r] = rs.kv_bytes + rs.req.output_len * kpt
+
+        def padded(a, fill):
+            out = np.full(R, fill, a.dtype)
+            out[:hi] = a[:hi]
+            return out
+
+        toks0 = padded(self.r_tokens, 0)
+        out0 = padded(self.r_out, 1)
+        inst0 = padded(self.r_inst, 0)
+        seq0 = padded(self.r_seq, 0)
+        live0 = padded(self.r_live, False)
+        pin0 = self.d_pinned[:n].copy()
+        orig(self, cohort, now)
+        in_cohort = np.zeros(n, bool)
+        in_cohort[np.asarray(cohort, int)] = True
+        toks, live, pinned, _, _, _ = cohort_step_jit(
+            jnp.asarray(toks0), jnp.asarray(out0), jnp.asarray(inst0),
+            jnp.asarray(seq0), jnp.asarray(grown), jnp.asarray(live0),
+            jnp.asarray(in_cohort), jnp.asarray(np.append(pin0, 0.0)),
+            kv_per_token=kpt, exact_clamp=True)
+        assert np.array_equal(np.asarray(toks)[:hi], self.r_tokens[:hi])
+        assert np.array_equal(np.asarray(live)[:hi], self.r_live[:hi])
+        assert np.array_equal(np.asarray(pinned)[:n], self.d_pinned[:n])
+        calls[0] += 1
+
+    InstancePlane._step_rows_vector = wrapper
+    try:
+        sim = Simulation(SimConfig(**cfg_kw))
+        sim.engine.scalar_rows_max = -1  # force the vector path throughout
+        trace = generate_trace("chatbot", **trace_kw)
+        sim.run(trace, drain=drain)
+    finally:
+        InstancePlane._step_rows_vector = orig
+    assert calls[0] > 100  # the vector path actually ran
+
+
+class TestCohortStepPlaneParity:
+    def test_bit_exact_64_gpu(self):
+        _drive_cohort_parity(
+            dict(scheduler="netkv-full", warmup=0.5, measure=2.0, seed=0),
+            dict(duration=2.5, target_rps=10.0, seed=0), drain=6.0)
+
+    def test_bit_exact_256_gpu(self):
+        _drive_cohort_parity(
+            dict(scheduler="netkv-full", warmup=0.5, measure=1.0, seed=1,
+                 n_pods=4, racks_per_pod=2, servers_per_rack=4),
+            dict(duration=1.5, target_rps=16.0, seed=1), drain=4.0)
+
+
+# ------------------------------------------------------- vmap consistency
+def _sweep_specs():
+    base = dict(warmup=0.5, measure=2.0, drain=1.5, target_rps=8.0)
+    return [
+        ScenarioSpec(seed=0, scheduler="netkv-full", **base),
+        ScenarioSpec(seed=0, scheduler="cla", **base),
+        ScenarioSpec(seed=1, scheduler="netkv-static", chunk_tokens=256,
+                     kv_streaming=True, **base),
+        ScenarioSpec(seed=1, scheduler="netkv-full", nic_policy="rail-affine",
+                     background=0.3, rewires=((1.0, {2: 0.5, 3: 0.5}),),
+                     **base),
+    ]
+
+
+class TestScenarioPlane:
+    def test_sweep_shapes_and_sanity(self):
+        specs = _sweep_specs()
+        plane = ScenarioPlane(specs, dt=0.01)
+        out = plane.sweep()
+        s = len(specs)
+        for key in ("n_measured", "n_served", "ttft_mean", "ttft_p50",
+                    "ttft_p95", "ttft_p99", "tbt_mean", "slo_attainment",
+                    "goodput_rps"):
+            assert key in out and out[key].shape == (s,), key
+        assert np.all(out["n_measured"] > 0)
+        assert np.all(out["n_served"] <= out["n_measured"])
+        served = out["n_served"] > 0
+        assert np.all(np.isfinite(out["ttft_p50"][served]))
+        att = out["slo_attainment"]
+        assert np.all((att >= 0.0) & (att <= 1.0) | np.isnan(att))
+
+    def test_batched_rows_match_solo_runs_bitwise(self):
+        specs = _sweep_specs()
+        plane = ScenarioPlane(specs, dt=0.01)
+        batched = plane.sweep(detail=True)
+        for i, sp in enumerate(specs):
+            solo = ScenarioPlane([sp], dt=0.01,
+                                 max_requests=plane.max_requests
+                                 ).sweep(detail=True)
+            for key, val in batched.items():
+                assert np.array_equal(np.asarray(val)[i],
+                                      np.asarray(solo[key])[0],
+                                      equal_nan=True), (key, i)
+
+    def test_mixed_shapes_rejected(self):
+        a = ScenarioSpec(seed=0)
+        b = ScenarioSpec(seed=0, n_pods=4)
+        with pytest.raises(ValueError):
+            ScenarioPlane([a, b])
+        c = ScenarioSpec(seed=0, measure=a.measure + 1.0)
+        with pytest.raises(ValueError):
+            ScenarioPlane([a, c])
+        with pytest.raises(ValueError):
+            ScenarioPlane([a], backend="tpu")
+        with pytest.raises(ValueError):
+            ScenarioPlane([])
+
+    def test_max_requests_floor_enforced(self):
+        sp = ScenarioSpec(seed=0, warmup=0.5, measure=2.0, drain=1.5,
+                          target_rps=8.0)
+        plane = ScenarioPlane([sp])
+        with pytest.raises(ValueError):
+            ScenarioPlane([sp], max_requests=plane.max_requests - 1)

@@ -510,3 +510,118 @@ class TestVectorisedAdmission:
         assert got == want
         assert all(rs.admit_time == 0.0
                    for rs in (plane.r_obj[r] for r in plane._inst_rows[0]))
+
+
+# ------------------------------------------------------- per-link rewiring
+class TestRewireLinks:
+    def test_per_link_edit_and_p50_summary(self):
+        tree = FatTree()
+        lid = int(np.flatnonzero(tree.link_tier == 3)[0])
+        before = tree.link_capacity.copy()
+        bw_dict = tree.tier_bandwidth          # oracle holds this reference
+        epoch0 = tree.topo_epoch
+        assert tree.rewire_links([lid], 1e9) == epoch0 + 1
+        assert tree.link_capacity[lid] == 1e9
+        assert tree.links[lid].capacity == 1e9
+        other = np.arange(tree.n_links) != lid
+        assert np.array_equal(tree.link_capacity[other], before[other])
+        # tier_bandwidth becomes the derived p50 of the per-link table,
+        # mutated IN PLACE (the oracle's live reference must see it).
+        assert tree.tier_bandwidth is bw_dict
+        t3 = tree.link_tier == 3
+        assert tree.tier_bandwidth[3] == float(
+            np.median(tree.link_capacity[t3]))
+        # Degrading a *majority* of tier-3 links moves the p50 itself.
+        most = np.flatnonzero(t3)[: int(t3.sum()) // 2 + 1]
+        tree.rewire_links(most, 2e9)
+        assert tree.tier_bandwidth[3] == 2e9
+
+    def test_validation(self):
+        tree = FatTree()
+        with pytest.raises(IndexError):
+            tree.rewire_links([tree.n_links], 1e9)
+        with pytest.raises(ValueError):
+            tree.rewire_links([0], 0.0)
+        with pytest.raises(ValueError):
+            tree.rewire_links([0], np.inf)
+        epoch = tree.topo_epoch
+        assert tree.rewire_links([], 1e9) == epoch   # no-op, no bump
+
+    def test_survives_other_tier_rewire(self):
+        """Tier-level rewires only rewrite their own tiers, so a per-link
+        edit elsewhere survives; re-asserting the edited tier resets it."""
+        tree = FatTree()
+        lid = int(np.flatnonzero(tree.link_tier == 3)[0])
+        tree.rewire_links([lid], 1e9)
+        tree.rewire(scale={2: 0.5})
+        assert tree.link_capacity[lid] == 1e9
+        tree.rewire(tier_bandwidth={3: PAPER_TIER_BANDWIDTH[3]})
+        assert tree.link_capacity[lid] == PAPER_TIER_BANDWIDTH[3]
+
+    def test_single_uplink_degrade_rewaterfills_dirty_component_only(self):
+        """The regression the incremental path exists for: degrading one
+        uplink must re-water-fill only the flows crossing it — the
+        link-disjoint component in the other pod keeps bit-identical
+        rates — and the incremental result must equal a full recompute."""
+        tree = FatTree()
+        net = FlowPlane(tree, BackgroundTraffic(0.0), seed=0)
+        # Two link-disjoint transfers: cross-rack inside pod 0 / pod 1.
+        ta = net.start_transfer((0, 0, 0), (0, 1, 0), 1e12, 0.0,
+                                lambda t, n: None, n_flows=4)
+        tb = net.start_transfer((1, 0, 0), (1, 1, 0), 1e12, 0.0,
+                                lambda t, n: None, n_flows=4)
+        slots_a = list(net._tslots[ta.transfer_id])
+        slots_b = list(net._tslots[tb.transfer_id])
+        rates_before = net.f_rate.copy()
+        # Degrade the first real hop of A's path (its NIC uplink).
+        lid = int(net.f_path[slots_a[0], 0])
+        tree.rewire_links([lid], tree.link_capacity[lid] * 0.1)
+        seen = []
+        orig = net._recompute_rates
+        net._recompute_rates = lambda dirty_links=None: (
+            seen.append(dirty_links), orig(dirty_links))[1]
+        try:
+            net.on_rewire_links([lid], 0.0)
+        finally:
+            net._recompute_rates = orig
+        assert len(seen) == 1 and np.array_equal(seen[0], [lid])
+        # Untouched component: bit-identical; dirty component: re-filled.
+        assert np.array_equal(net.f_rate[slots_b], rates_before[slots_b])
+        assert not np.array_equal(net.f_rate[slots_a], rates_before[slots_a])
+        # Incremental result == full recompute over the same residuals.
+        after = net.f_rate.copy()
+        net._recompute_rates(dirty_links=None)
+        assert np.array_equal(net.f_rate, after)
+
+    def test_inside_epoch_rejected(self):
+        net = FlowPlane(FatTree(), BackgroundTraffic(0.0), seed=0)
+        net.begin_epoch()
+        with pytest.raises(RuntimeError):
+            net.on_rewire_links([0], 0.0)
+        net.end_epoch()
+
+    def test_oracle_stale_until_forced(self):
+        """A per-link rewire reaches the scheduler only via refresh; the
+        notify path (``force_refresh``) delivers it immediately."""
+        tree = FatTree()
+        oracle = NetworkCostOracle(tree.tier, topology=tree,
+                                   refresh_interval=100.0)
+        v0 = oracle.view(0.0)
+        b3_old = v0.tier_bandwidth[3]
+        t3 = np.flatnonzero(tree.link_tier == 3)
+        tree.rewire_links(t3, 1e9)
+        assert oracle.view(1.0).tier_bandwidth[3] == b3_old   # stale
+        v1 = oracle.force_refresh(1.0)
+        assert v1.tier_bandwidth[3] == 1e9
+        assert oracle.view(2.0) is v1                         # new snapshot
+        assert oracle.refreshes == 2
+
+    def test_simulation_notify_rewires_wiring(self):
+        from repro.sim.simulator import RewireEvent, SimConfig, Simulation
+
+        for notify, extra in ((False, 0), (True, 1)):
+            sim = Simulation(SimConfig(notify_rewires=notify))
+            sim.oracle.view(0.0)
+            n0 = sim.oracle.refreshes
+            sim._on_rewire(RewireEvent(time=0.0, scale={3: 0.5}), 0.0)
+            assert sim.oracle.refreshes == n0 + extra
