@@ -25,6 +25,49 @@ from .common import emit, knobs, write_csv
 SCALES = [(64, 2, 2, 2), (128, 2, 4, 2), (256, 2, 8, 2), (512, 2, 16, 2),
           (1024, 2, 32, 2), (2048, 2, 64, 2), (4096, 2, 128, 2)]
 
+# CI gate: EventPlane events/s on the 2048-GPU headline row must stay at
+# least this multiple of the retired per-event heap engine
+# (event_engine="reference") on the identical drive.  Local runs land
+# ~3.5-4x; the floor is set conservatively (same pattern as CHURN_FLOOR /
+# SPEEDUP_FLOOR in net_throughput).
+EVENTS_FLOOR = 2.0
+
+
+def _event_engine_gate(k: dict) -> list[dict]:
+    """Time the 2048-GPU netkv-full row under both event engines."""
+    gpus, pods, racks, servers = next(s for s in SCALES if s[0] == 2048)
+    n_prefill = max(gpus // 64, 1) * 4
+    n_decode = gpus // 4 - n_prefill
+    cap = profile_capacity("rag", n_prefill=n_prefill, n_decode=n_decode,
+                           tor_egress_bytes_per_s=8 * 50e9 / 8 * max(gpus // 64, 1))
+    from repro.sim import Simulation
+
+    rows = []
+    for engine in ("plane", "reference"):
+        trace = generate_trace("rag", duration=k["duration"], target_rps=cap,
+                               seed=0)
+        cfg = SimConfig(scheduler="netkv-full", seed=0, background=0.2,
+                        n_pods=pods, racks_per_pod=racks,
+                        servers_per_rack=servers, n_prefill=n_prefill,
+                        warmup=k["warmup"], measure=k["measure"],
+                        event_engine=engine)
+        sim = Simulation(cfg)
+        t0 = time.perf_counter()
+        sim.run(trace)
+        wall = time.perf_counter() - t0
+        rows.append(dict(axis="event_engine", gpus=gpus, engine=engine,
+                         events=int(sim.loop.processed), wall_s=wall,
+                         events_per_s=sim.loop.processed / max(wall, 1e-9)))
+    ratio = rows[0]["events_per_s"] / max(rows[1]["events_per_s"], 1e-9)
+    for r in rows:
+        r["plane_vs_reference"] = ratio
+    print(f"  exp7 event-engine 2048gpus: plane={rows[0]['events_per_s']:.0f}ev/s "
+          f"reference={rows[1]['events_per_s']:.0f}ev/s ({ratio:.1f}x)")
+    assert ratio >= EVENTS_FLOOR, (
+        f"EventPlane throughput regressed: {ratio:.2f}x < {EVENTS_FLOOR}x "
+        f"the reference engine on the 2048-GPU row")
+    return rows
+
 
 def run(quick: bool = False) -> list[dict]:
     k = knobs(quick)
@@ -82,6 +125,7 @@ def run(quick: bool = False) -> list[dict]:
                   f"{row['decode_iters_per_s']:.0f}dec-iter/s "
                   f"{row['sim_s_per_wall_s']:.1f}x realtime")
     write_csv("exp7_scalability", rows)
+    write_csv("exp7_event_engine", _event_engine_gate(k))
     # Per-decision scoring-path comparison at 1024-GPU-class pool sizes:
     # python loop vs vectorised NumPy vs Pallas kernel (interpret on CPU).
     from .sched_latency import micro_latency

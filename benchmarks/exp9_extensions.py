@@ -7,8 +7,10 @@ Three sweeps over the same rag workload, TTFT/SLO per scheduler:
     per-transfer ceiling stays B_1, so the prefill-side nic_up bottleneck
     relaxes and the win shifts from "avoid the hot NIC" to "avoid the hot
     tier".
-(b) **NIC-policy ablation** — hash vs least-loaded vs rail-affine at 4
-    NICs: how much of the multi-NIC win needs a smart rail choice.
+(b) **NIC-policy ablation** — hash vs least-loaded vs rail-affine vs the
+    trace-adaptive policy (hash<->rail-affine on the observed transfer-size
+    EWMA) at 4 NICs: how much of the multi-NIC win needs a smart rail
+    choice, and whether adapting to the trace recovers the best static one.
 (c) **OCS rewire schedule** — rack->pod uplinks (tiers 2+3) degrade to 25 %
     capacity mid-trace and are restored later (optical circuit
     reconfiguration).  The oracle only sees the swap at its next refresh,
@@ -28,7 +30,7 @@ from .common import emit, knobs, write_csv
 
 NIC_SWEEP = [1, 2, 4, 8]
 QUICK_NIC_SWEEP = [1, 4]
-NIC_POLICIES = ["hash", "least-loaded", "rail-affine"]
+NIC_POLICIES = ["hash", "least-loaded", "rail-affine", "adaptive"]
 SCHEDULERS = ["cla", "netkv-static", "netkv-full"]
 DEGRADE = 0.25   # OCS event: tiers 2+3 drop to a quarter of capacity
 

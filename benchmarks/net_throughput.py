@@ -29,6 +29,7 @@ import time
 import numpy as np
 
 from repro.cluster import BackgroundTraffic, FatTree, FlowPlane, ReferenceFlowNetwork
+from repro.sim.engine import LANE_NET, EventLoop, EventPlane
 
 from .common import emit, write_csv
 
@@ -37,6 +38,7 @@ SIZES = [1_000, 10_000, 50_000]
 REF_CAP = 10_000          # reference arm is minutes/pass above this
 QUICK_SIZES = [1_000, 10_000]   # CI smoke reaches the acceptance size
 SPEEDUP_FLOOR = 10.0      # required FlowPlane/reference ratio at >= 10k flows
+EVENTS_FLOOR = 3.0        # EventPlane vs EventLoop on NET-lane re-arm churn
 
 
 def _servers(kw=TREE_KW):
@@ -99,6 +101,44 @@ def _churn(net):
     return fn
 
 
+def _engine_churn_rows(n_standing=1_000, n_rearms=20_000) -> list[dict]:
+    """NET-lane re-arm churn: EventPlane slot overwrite vs EventLoop
+    cancel+push.
+
+    This is the completion-timer pattern ``Simulation._reschedule_net``
+    drives on every flow arrival/completion: the pending completion event
+    is replaced with one at the new ETA.  The heap engine pays a cancel
+    plus an O(log n) push (and periodic corpse compaction) against the
+    standing population; the plane overwrites one slot tuple.  Gate:
+    EventPlane must hold >= EVENTS_FLOOR x re-arm throughput.
+    """
+    noop = lambda now: None
+    rows = []
+    for cls in (EventPlane, EventLoop):
+        loop = cls()
+        for i in range(n_standing):
+            loop.at(1e9 + i, noop)   # standing far-future population
+
+        def fn():
+            for i in range(n_rearms):
+                loop.arm(LANE_NET, 1e6 + (i & 7), noop)
+
+        best = _time(fn, reps=5)
+        rows.append(dict(engine=cls.__name__, standing=n_standing,
+                         rearms=n_rearms, best_s=best,
+                         rearms_per_s=n_rearms / max(best, 1e-12)))
+    ratio = rows[0]["rearms_per_s"] / max(rows[1]["rearms_per_s"], 1e-12)
+    for r in rows:
+        r["plane_vs_loop"] = ratio
+    print(f"  net_throughput NET-lane churn: plane="
+          f"{rows[0]['rearms_per_s']:.0f}/s loop={rows[1]['rearms_per_s']:.0f}/s "
+          f"({ratio:.1f}x)")
+    assert ratio >= EVENTS_FLOOR, (
+        f"EventPlane NET-lane re-arm churn {ratio:.2f}x below the "
+        f"{EVENTS_FLOOR:.0f}x floor vs EventLoop")
+    return rows
+
+
 def run(quick: bool = False) -> list[dict]:
     sizes = QUICK_SIZES if quick else SIZES
     rows = []
@@ -144,6 +184,7 @@ def run(quick: bool = False) -> list[dict]:
               f"({row['churn_speedup']:.0f}x)")
         rows.append(row)
     write_csv("net_throughput", rows)
+    write_csv("net_event_churn", _engine_churn_rows())
     # Acceptance gates, enforced wherever the 10k arm runs (incl. CI smoke).
     for r in rows:
         if r["flows"] >= 10_000 and np.isfinite(r["recompute_speedup"]):

@@ -1,10 +1,14 @@
 """Benchmark orchestrator: one harness per paper table/figure.
 
 Usage:
-    python -m benchmarks.run [--quick] [--only exp1,roofline]
+    python -m benchmarks.run [--quick] [--only exp1,roofline] [--profile]
 
 Prints one ``name,us_per_call,derived`` CSV line per harness (stdout
-contract) and writes full tables to artifacts/bench/*.csv.
+contract) and writes full tables to artifacts/bench/*.csv.  With
+``--profile`` the event engines accumulate per-lane / per-handler
+cumulative dispatch time across every simulation the selected harnesses
+run, written to artifacts/bench/event_profile.csv — the first place to
+look when hunting where event time goes.
 """
 
 from __future__ import annotations
@@ -55,7 +59,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated harness names")
+    ap.add_argument("--profile", action="store_true",
+                    help="write per-lane/per-handler event dispatch times "
+                         "to artifacts/bench/event_profile.csv")
     args = ap.parse_args()
+    if args.profile:
+        from repro.sim.engine import enable_profiling
+        enable_profiling(True)
     names = list(HARNESSES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = 0
@@ -68,6 +78,15 @@ def main() -> None:
             failures += 1
             print(f"{name},{(time.time()-t0)*1e6:.0f},ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.profile:
+        from repro.sim.engine import profile_rows
+
+        from .common import write_csv
+        rows = profile_rows()
+        if rows:
+            path = write_csv("event_profile", rows)
+            print(f"# event profile: {len(rows)} (lane, handler) rows -> {path}",
+                  file=sys.stderr)
     if failures:
         sys.exit(1)
 

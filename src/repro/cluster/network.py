@@ -76,6 +76,13 @@ class BackgroundTraffic:
     def tier_map(self, now: float) -> dict[int, float]:
         return {t: self.util(t, now) for t in range(4)}
 
+    @property
+    def is_static(self) -> bool:
+        """True when ``util`` is time-invariant (the wander sinusoid is off
+        or never applied) — the condition under which idle net ticks are
+        provably no-ops and may be elided."""
+        return self.wander <= 0.0 or not any(self.base.values())
+
 
 @dataclasses.dataclass
 class Transfer:
@@ -230,10 +237,15 @@ class FlowPlane:
         # exactly B_tau while distinct transfers can still collide.  Same
         # RNG draw sequence as the reference's flow_path.  The NIC pair is
         # resolved here, at flow start, by the engine's NIC policy (tier 0
-        # never crosses a NIC and must not consume policy draws).
-        nics = (0, 0) if tier == 0 else self.nic_policy.pick(
-            self.tree, self.tree.server_index(src), self.tree.server_index(dst),
-            self.rng)
+        # never crosses a NIC and must not consume policy draws or size
+        # observations).
+        if tier == 0:
+            nics = (0, 0)
+        else:
+            self.nic_policy.observe(total_bytes)
+            nics = self.nic_policy.pick(
+                self.tree, self.tree.server_index(src),
+                self.tree.server_index(dst), self.rng)
         row, plen = self.tree.path_row(src, dst, self.rng, nics=nics)
         row = np.where(row < 0, self._pad, row).astype(self._path_dtype)
         slots = []

@@ -96,10 +96,15 @@ class ReferenceFlowNetwork:
         # One ECMP hash per transfer: TP shard flows share the host pair and
         # take the same uplinks, so the per-transfer uncontested ceiling is
         # exactly B_tau while distinct transfers can still collide.  NIC
-        # pair resolved at flow start, same policy call order as the plane.
-        nics = (0, 0) if tier == 0 else self.nic_policy.pick(
-            self.tree, self.tree.server_index(src), self.tree.server_index(dst),
-            self.rng)
+        # pair resolved at flow start, same policy call order (observe then
+        # pick, tier-0 exempt) as the plane.
+        if tier == 0:
+            nics = (0, 0)
+        else:
+            self.nic_policy.observe(total_bytes)
+            nics = self.nic_policy.pick(
+                self.tree, self.tree.server_index(src),
+                self.tree.server_index(dst), self.rng)
         path = tuple(self.tree.flow_path(src, dst, self.rng, nics=nics))
         for _ in range(n_flows):
             f = Flow(self._next_flow, t, path, per_flow)

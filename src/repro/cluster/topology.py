@@ -62,6 +62,11 @@ class NicPolicy:
         """Attach an engine-side ``load_fn(link_ids) -> open-flow counts``."""
         self._load_fn = load_fn
 
+    def observe(self, nbytes: float) -> None:
+        """Engines report each transfer's size before asking for a pick —
+        stateless policies ignore it; the adaptive policy tracks the
+        distribution."""
+
     def pick(self, tree: "FatTree", si: int, di: int, rng) -> tuple[int, int]:
         raise NotImplementedError
 
@@ -116,10 +121,50 @@ class RailAffineNicPolicy(NicPolicy):
         return rail, rail
 
 
+class AdaptiveNicPolicy(NicPolicy):
+    """Trace-adaptive rail choice: switch hash <-> rail-affine on the
+    observed transfer-size distribution.
+
+    Rail-affine wins for large/persistent transfers (a dedicated rail end
+    to end, no hash collisions below host capacity); hash wins for
+    small/many (round-robin rails would synchronise bursts onto one rail
+    pair).  The policy tracks an EWMA of observed transfer sizes and
+    delegates each pick to whichever specialist the current mean selects —
+    above ``threshold_bytes`` rail-affine, below it hash.  The first
+    ``warm`` observations always use hash (the paper's default), so a
+    cold start matches the hash baseline bit-for-bit.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, threshold_bytes: float = 256e6, alpha: float = 0.1,
+                 warm: int = 8) -> None:
+        self._hash = HashNicPolicy()
+        self._rail = RailAffineNicPolicy()
+        self.threshold_bytes = float(threshold_bytes)
+        self.alpha = float(alpha)
+        self.warm = int(warm)
+        self.ewma = 0.0
+        self.seen = 0
+
+    def observe(self, nbytes: float) -> None:
+        self.seen += 1
+        if self.seen == 1:
+            self.ewma = float(nbytes)
+        else:
+            self.ewma += self.alpha * (float(nbytes) - self.ewma)
+
+    def pick(self, tree, si, di, rng):
+        if self.seen > self.warm and self.ewma >= self.threshold_bytes:
+            return self._rail.pick(tree, si, di, rng)
+        return self._hash.pick(tree, si, di, rng)
+
+
 NIC_POLICIES = {
     "hash": HashNicPolicy,
     "least-loaded": LeastLoadedNicPolicy,
     "rail-affine": RailAffineNicPolicy,
+    "adaptive": AdaptiveNicPolicy,
 }
 
 

@@ -1,6 +1,10 @@
 """Discrete-event disaggregated-serving simulator."""
 
-from .engine import EventLoop
+from .engine import (
+    LANE_ARRIVAL, LANE_CLOCK, LANE_FAULT, LANE_GENERIC, LANE_NET,
+    LANE_PREFILL, LANE_REWIRE, LANE_TICK, LANE_NAMES, N_LANES,
+    EventLoop, EventPlane, make_event_loop,
+)
 from .kvcache import B_TOK, BlockCache, RadixPlane, n_blocks
 from .instances import (
     ChunkPlane, DecodeHandle, InstancePlane, PrefillHandle, RequestState,
@@ -13,7 +17,10 @@ from .scenarios import ScenarioPlane, ScenarioSpec, cohort_step, cohort_step_jit
 from .simulator import FaultEvent, RewireEvent, SimConfig, Simulation, run_sim
 
 __all__ = [
-    "EventLoop", "B_TOK", "BlockCache", "RadixPlane", "n_blocks",
+    "EventLoop", "EventPlane", "make_event_loop",
+    "LANE_GENERIC", "LANE_ARRIVAL", "LANE_FAULT", "LANE_REWIRE", "LANE_NET",
+    "LANE_TICK", "LANE_CLOCK", "LANE_PREFILL", "LANE_NAMES", "N_LANES",
+    "B_TOK", "BlockCache", "RadixPlane", "n_blocks",
     "ChunkPlane", "InstancePlane", "DecodeHandle", "PrefillHandle",
     "ChunkedPrefillSim", "DecodeSim", "PrefillSim", "ReferenceInstanceEngine",
     "RequestState", "RunMetrics", "aggregate_seeds", "summarize",

@@ -61,7 +61,7 @@ from repro.core.cost import (
 )
 from repro.core.view import ClusterView
 from repro.traces.mooncake import Request
-from .engine import EventLoop
+from .engine import LANE_CLOCK, LANE_PREFILL, EventLoop
 from .kvcache import RadixPlane
 
 
@@ -339,8 +339,8 @@ class ChunkPlane:
         self.pending[s] -= nfirst
         self.busy[s] = base + (self.model.c * total + self.model.d * nfirst)
         self.inflight[s] = served
-        self.owner.loop.at(float(self.busy[s]),
-                           lambda t, s=s: self._iteration_done(s, t))
+        self.owner.loop.arm_slot(LANE_PREFILL, s, float(self.busy[s]),
+                                 self._iteration_done)
 
     def _iteration_done(self, s: int, now: float) -> None:
         served = self.inflight[s]
@@ -469,9 +469,8 @@ class InstancePlane:
         #                              scalar path runs (tests pin 0 / inf
         #                              to force either path)
 
-        # ---------- cohort iteration clock --------------------------------
-        self._clock_ev = None
-        self._clock_at = np.inf
+        # The cohort iteration clock lives in the loop's LANE_CLOCK slot
+        # (arm/disarm with dedupe) — no per-plane event bookkeeping.
 
         for m in dec_meta:
             self.add_decode(m.instance_id, m.server)
@@ -560,8 +559,8 @@ class InstancePlane:
             eta = eta + self.prefill_model(queued.req.input_len)
         self.p_eta[s] = eta
         self.p_qlen[s] = len(self.p_queue[s])
-        self.loop.at(float(self.p_busy[s]),
-                     lambda t, s=s: self._prefill_finish(s, t))
+        self.loop.arm_slot(LANE_PREFILL, s, float(self.p_busy[s]),
+                           self._prefill_finish)
 
     def _prefill_finish(self, s: int, now: float) -> None:
         rs = self.p_running[s]
@@ -772,18 +771,131 @@ class InstancePlane:
     def _reschedule_clock(self) -> None:
         n = self.n_dec
         t = float(self.d_deadline[:n].min()) if n else np.inf
-        if self._clock_ev is not None:
-            if t == self._clock_at and not self._clock_ev.cancelled:
-                return
-            self.loop.cancel(self._clock_ev)
-            self._clock_ev = None
         if np.isfinite(t):
-            self._clock_ev = self.loop.at(t, self._step)
-            self._clock_at = t
+            self.loop.arm(LANE_CLOCK, t, self._step, dedupe=True)
         else:
-            self._clock_at = np.inf
+            self.loop.disarm(LANE_CLOCK)
 
     def _step(self, now: float) -> None:
+        """Clock-lane dispatch: step every instance due at ``now``.
+
+        On a batched engine this is a *horizon loop*: after the due cohort
+        steps, the plane keeps absorbing its own future iteration
+        boundaries — fused per-instance runs via ``_fast_forward`` where no
+        admission/first-token/finish can occur, in-batch cohort steps via
+        ``lane_tick`` otherwise — up to the earliest event pending on any
+        other lane.  Nothing else can dispatch inside that window, so the
+        absorbed boundaries observe exactly the state the reference engine
+        would hand them, one heap pop at a time.  On the reference engine
+        it is one cohort step + re-arm, as before.
+        """
+        loop = self.loop
+        if not loop.batched:
+            self._step_cohort(now)
+            self._reschedule_clock()
+            return
+        while True:
+            self._step_cohort(now)
+            h = loop.lane_horizon(LANE_CLOCK)
+            t = self._fast_forward(h)
+            if t < h:
+                # Next boundary still precedes every other lane but needs
+                # the full cohort step (admission pending, first token or
+                # finish due, or a deadline tie across instances).
+                loop.lane_tick(LANE_CLOCK, t)   # advances loop.now first
+                now = t
+                continue
+            if t < np.inf:
+                loop.arm(LANE_CLOCK, t, self._step, dedupe=True)
+            else:
+                loop.disarm(LANE_CLOCK)
+            return
+
+    def _fast_forward(self, h: float) -> float:
+        """Fuse eligible instances' iteration boundaries strictly below ``h``.
+
+        An instance qualifies while nothing observable can happen at its
+        boundaries: healthy, empty admit queue, all rows past their first
+        token, and stopping one boundary short of the earliest finish.  For
+        such a run the per-boundary work collapses to scalar float updates —
+        the *same op sequence* the cohort step performs (EWMA estimator,
+        one ``+= kv_per_token`` per active row, cache evict-to-limit,
+        ``deadline += t_iter``), so state lands bit-identical to stepping
+        through the engine.  Returns the new earliest deadline.
+        """
+        n = self.n_dec
+        dl = self.d_deadline
+        if not n:
+            return float(np.inf)
+        cand = (dl[:n] < h).nonzero()[0]
+        if cand.size:
+            loop = self.loop
+            cache = self.cache
+            trace = loop.trace_log is not None
+            kpt = float(self.kv_per_token)
+            bpb = cache.bytes_per_block
+            budget = cache.budget
+            count = cache.count
+            evict = cache._evict_to_limit
+            iter_model = self.iter_model
+            r_tokens, r_out = self.r_tokens, self.r_out
+            est = self.d_iter_scale_est
+            for s_ in cand:
+                s = int(s_)
+                if not self.d_healthy[s] or self.d_qlen[s]:
+                    continue
+                rows = self._inst_rows[s]
+                if not rows:
+                    continue
+                mintok = 10 ** 9
+                max_k = 10 ** 9
+                for r in rows:
+                    tk = int(r_tokens[r])
+                    rem = int(r_out[r]) - tk
+                    if tk < mintok:
+                        mintok = tk
+                    if rem < max_k:
+                        max_k = rem
+                max_k -= 1      # the boundary reaching a finish runs slow
+                if mintok < 1 or max_k <= 0:
+                    continue
+                active = len(rows)
+                scale = float(self.d_iter_scale[s])
+                dur = iter_model(active) * scale
+                t = float(dl[s])
+                e = float(est[s])
+                p = float(self.d_pinned[s])
+                cb = float(budget[s])
+                nb = int(count[s])
+                k = 0
+                times = [] if trace else None
+                while t < h and k < max_k:
+                    e = e + 0.2 * (scale - e)
+                    for _ in range(active):
+                        p = p + kpt
+                    limit = cb - p
+                    if limit < 0.0:
+                        limit = 0.0
+                    if nb * bpb > limit:
+                        evict(s, limit)
+                        nb = int(count[s])
+                    if trace:
+                        times.append(t)
+                    k += 1
+                    t = t + dur
+                if not k:
+                    continue
+                dl[s] = t
+                est[s] = e
+                self.d_pinned[s] = p
+                self.d_iterations[s] += k
+                for r in rows:
+                    r_tokens[r] += k
+                self._sync_slot(s)
+                loop.lane_ticks(LANE_CLOCK, k, times=times)
+        return float(dl[:n].min())
+
+    def _step_cohort(self, now: float) -> None:
         """Cohort iteration boundary: every instance due at ``now`` steps.
 
         Token accounting, first-token detection, decode-side KV growth and
@@ -796,8 +908,6 @@ class InstancePlane:
         bit-identical to the reference (the parity tests pin the threshold
         to force each).
         """
-        self._clock_ev = None
-        self._clock_at = np.inf
         n = self.n_dec
         cohort = (self.d_deadline[:n] <= now).nonzero()[0]
         if cohort.size:
@@ -844,7 +954,6 @@ class InstancePlane:
                 self._sync_slot(int(cohort[0]))
             else:
                 self._sync_rows(cohort)
-        self._reschedule_clock()
 
     def _step_rows_scalar(self, cohort, now: float) -> None:
         """Small-cohort token accounting: per-row scalar ops, no table scan."""

@@ -37,7 +37,7 @@ from typing import Callable, Hashable, Optional, Sequence
 
 from repro.core.cost import B_TOK, IterTimeModel, ModelKVSpec, PrefillTimeModel
 from repro.core.view import ClusterView
-from .engine import EventLoop
+from .engine import LANE_CLOCK, LANE_PREFILL, EventLoop
 
 
 class BlockCache:
@@ -137,7 +137,7 @@ class PrefillSim:
         rs.prefill_start = max(now, self.busy_until)
         dur = self.model(rs.req.input_len)
         self.busy_until = rs.prefill_start + dur
-        self.loop.at(self.busy_until, self._finish)
+        self.loop.at(self.busy_until, self._finish, lane=LANE_PREFILL)
 
     def _finish(self, now: float) -> None:
         rs = self.running
@@ -242,7 +242,7 @@ class ChunkedPrefillSim:
         self.pending -= nfirst
         self.busy_until = base + (self.model.c * total + self.model.d * nfirst)
         self.inflight = served
-        self.loop.at(self.busy_until, self._iteration_done)
+        self.loop.at(self.busy_until, self._iteration_done, lane=LANE_PREFILL)
 
     def _iteration_done(self, now: float) -> None:
         served = self.inflight
@@ -416,7 +416,8 @@ class DecodeSim:
         self._iterating = True
         self._sync()
         dur = self.iter_model(self.beta) * self.iter_scale
-        self._iter_event = self.loop.after(dur, self._iter_done)
+        self._iter_event = self.loop.after(dur, self._iter_done,
+                                           lane=LANE_CLOCK)
 
     def _iter_done(self, now: float) -> None:
         self._iterating = False

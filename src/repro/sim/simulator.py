@@ -50,7 +50,14 @@ from repro.core.view import ClusterView
 from repro.cluster.network import BackgroundTraffic, FlowPlane, Transfer
 from repro.cluster.topology import FatTree, make_instances
 from repro.traces.mooncake import Request
-from .engine import EventLoop
+from .engine import (
+    LANE_ARRIVAL,
+    LANE_FAULT,
+    LANE_NET,
+    LANE_REWIRE,
+    LANE_TICK,
+    make_event_loop,
+)
 from .instances import InstancePlane, RequestState
 from .metrics import RunMetrics, summarize
 from .reference import ReferenceInstanceEngine
@@ -136,13 +143,20 @@ class SimConfig:
     # notified-vs-stale arms).
     notify_rewires: bool = False
     net_tick: float = 0.1                   # rate refresh for wandering bg
+    # "auto" elides the fixed-interval net tick while background traffic is
+    # piecewise-constant AND no flow is in the air — ticks that are provably
+    # no-ops — re-arming on the preserved tick grid when a transfer starts.
+    # "always" keeps every tick (the pre-EventPlane behaviour; outcomes are
+    # identical either way).
+    net_tick_mode: str = "auto"             # "auto" | "always"
+    event_engine: str = "plane"             # "plane" | "reference"
     staging_capacity: float = 512e9         # per-pod DRAM KV store (multihop)
 
 
 class Simulation:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
-        self.loop = EventLoop()
+        self.loop = make_event_loop(cfg.event_engine)
         self.tree = FatTree(
             cfg.n_pods, cfg.racks_per_pod, cfg.servers_per_rack, cfg.gpus_per_server,
             tier_bandwidth=cfg.tier_bandwidth, tier_latency=cfg.tier_latency,
@@ -230,7 +244,14 @@ class Simulation:
         self.records: list[RequestState] = []
         self.rejected = 0
         self.decision_latencies: list[float] = []
-        self._net_event = None
+        # Net-tick elision state: _tick_next replays the exact float grid
+        # the old after()-chain produced (sequential now + net_tick adds);
+        # _tick_idle means the chain is dormant and must be woken by the
+        # next network activity.
+        self._tick_next = 0.0
+        self._tick_idle = False
+        self._net_tick_elidable = (cfg.net_tick_mode == "auto"
+                                   and self.bg.is_static)
         self._batch_window: list[tuple[RequestState, int]] = []
         self._batch_timer = None
         self._inbound: dict[int, list] = {}   # decode id -> [(rs, transfer)]
@@ -249,16 +270,29 @@ class Simulation:
 
     # ---------------------------------------------------------------- trace
     def load_trace(self, trace: Sequence[Request]) -> None:
+        kv_bytes = self.cfg.kv_spec.kv_bytes
+        arrivals: list[float] = []
+        states: list[RequestState] = []
         for req in trace:
-            rs = RequestState(req=req, kv_bytes=float(self.cfg.kv_spec.kv_bytes(req.input_len)))
+            rs = RequestState(req=req, kv_bytes=float(kv_bytes(req.input_len)))
             self.records.append(rs)
-            self.loop.at(req.arrival, lambda now, rs=rs: self._on_arrival(rs, now))
-        for f in self.cfg.faults:
-            self.loop.at(f.time, lambda now, f=f: self._on_fault(f, now))
-        for rw in self.cfg.rewires:
-            self.loop.at(rw.time, lambda now, rw=rw: self._on_rewire(rw, now))
+            arrivals.append(req.arrival)
+            states.append(rs)
+        # Whole schedules are known up front: bulk-load them as lane
+        # cursors (presorted array + position on the plane engine; the
+        # equivalent in-order at() sequence on the reference engine).
+        self.loop.load_cursor(LANE_ARRIVAL, arrivals, states, self._on_arrival)
+        faults = list(self.cfg.faults)
+        if faults:
+            self.loop.load_cursor(LANE_FAULT, [f.time for f in faults],
+                                  faults, self._on_fault)
+        rewires = list(self.cfg.rewires)
+        if rewires:
+            self.loop.load_cursor(LANE_REWIRE, [rw.time for rw in rewires],
+                                  rewires, self._on_rewire)
         if self.cfg.net_tick > 0:
-            self.loop.after(self.cfg.net_tick, self._net_tick)
+            self._tick_next = self.loop.now + self.cfg.net_tick
+            self.loop.arm(LANE_TICK, self._tick_next, self._net_tick)
 
     # ------------------------------------------------------------ prefill side
     def _on_arrival(self, rs: RequestState, now: float) -> None:
@@ -536,15 +570,14 @@ class Simulation:
         return self.engine.decode_by_id(iid)  # O(1): ClusterView.slot_of
 
     def _reschedule_net(self, now: float) -> None:
+        if self._tick_idle:
+            self._wake_tick(now)
         nct = self.net.next_completion_time(now)
         if nct is None:
             return
-        if self._net_event is not None:
-            self.loop.cancel(self._net_event)
-        self._net_event = self.loop.at(nct, self._net_fire)
+        self.loop.arm(LANE_NET, nct, self._net_fire)
 
     def _net_fire(self, now: float) -> None:
-        self._net_event = None
         # Buffer every completion this advance pops (the FlowPlane already
         # batch-pops all flows finishing at one instant), then admit them as
         # a single InstancePlane epoch.
@@ -565,8 +598,26 @@ class Simulation:
     def _net_tick(self, now: float) -> None:
         self.net.refresh_rates(now)
         self._reschedule_net(now)
-        if not self.loop.empty():
-            self.loop.after(self.cfg.net_tick, self._net_tick)
+        if self.loop.empty():
+            return
+        self._tick_next = now + self.cfg.net_tick
+        if self._net_tick_elidable and self.net.n_flows_active == 0:
+            # Static background + empty network: every tick until the next
+            # transfer starts would refresh rates to the values they already
+            # hold.  Go dormant; _reschedule_net wakes the chain on the
+            # preserved grid as soon as a flow enters the plane.
+            self._tick_idle = True
+            return
+        self.loop.arm(LANE_TICK, self._tick_next, self._net_tick)
+
+    def _wake_tick(self, now: float) -> None:
+        self._tick_idle = False
+        t = self._tick_next
+        tick = self.cfg.net_tick
+        while t <= now:
+            t = t + tick     # replay the skipped grid points exactly
+        self._tick_next = t
+        self.loop.arm(LANE_TICK, t, self._net_tick)
 
     # ------------------------------------------------------ topology dynamics
     def _on_rewire(self, rw: RewireEvent, now: float) -> None:

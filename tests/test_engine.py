@@ -1,6 +1,23 @@
-"""EventLoop behaviour: O(1) live-event accounting for empty()."""
+"""Event-engine behaviour: the reference EventLoop and the typed-lane
+EventPlane — shared API semantics, heap-compaction hygiene, and the
+property test pinning identical pop order across the two engines."""
 
-from repro.sim.engine import EventLoop
+import itertools
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.sim.engine import (
+    LANE_ARRIVAL,
+    LANE_CLOCK,
+    LANE_NET,
+    LANE_PREFILL,
+    EventLoop,
+    EventPlane,
+    make_event_loop,
+)
+
+ENGINES = [EventLoop, EventPlane]
 
 
 def _noop(now):
@@ -94,3 +111,258 @@ class TestNextTime:
         assert loop.next_time() == 1.0
         loop.run(until=0.5)
         assert loop.next_time() == 1.0
+
+
+@pytest.mark.parametrize("cls", ENGINES)
+class TestSharedLaneAPI:
+    """Both engines expose one lane API with identical observable behaviour."""
+
+    def test_make_event_loop(self, cls):
+        kind = "reference" if cls is EventLoop else "plane"
+        assert type(make_event_loop(kind)) is cls
+        with pytest.raises(ValueError):
+            make_event_loop("nope")
+
+    def test_generic_dispatch_order_and_until(self, cls):
+        loop = cls()
+        fired = []
+        loop.at(2.0, lambda t: fired.append(("b", t)))
+        loop.at(1.0, lambda t: fired.append(("a", t)))
+        loop.at(2.0, lambda t: fired.append(("c", t)))  # same-time: seq order
+        loop.run(until=1.5)
+        assert fired == [("a", 1.0)] and loop.now == 1.5 and not loop.empty()
+        loop.run()
+        assert fired == [("a", 1.0), ("b", 2.0), ("c", 2.0)] and loop.empty()
+
+    def test_cursor_fires_in_time_then_load_order(self, cls):
+        loop = cls()
+        fired = []
+        loop.load_cursor(LANE_ARRIVAL, [1.0, 0.5, 1.0], ["a", "b", "c"],
+                         lambda p, t: fired.append((p, t)))
+        assert not loop.empty()
+        assert loop.next_time() == 0.5
+        loop.run()
+        assert fired == [("b", 0.5), ("a", 1.0), ("c", 1.0)]
+        assert loop.empty()
+
+    def test_cursor_interleaves_with_generic_events(self, cls):
+        loop = cls()
+        fired = []
+        loop.at(0.75, lambda t: fired.append(("g", t)))
+        loop.load_cursor(LANE_ARRIVAL, [0.5, 1.0], ["a", "b"],
+                         lambda p, t: fired.append((p, t)))
+        loop.run()
+        assert fired == [("a", 0.5), ("g", 0.75), ("b", 1.0)]
+
+    def test_second_cursor_load_merges_pending(self, cls):
+        loop = cls()
+        fired = []
+        h = lambda p, t: fired.append(p)
+        loop.load_cursor(LANE_ARRIVAL, [1.0, 3.0], ["a", "b"], h)
+        loop.run(until=1.5)
+        loop.load_cursor(LANE_ARRIVAL, [2.0], ["c"], h)
+        loop.run()
+        assert fired == ["a", "c", "b"]
+
+    def test_arm_single_slot_replaces(self, cls):
+        loop = cls()
+        fired = []
+        loop.arm(LANE_NET, 2.0, lambda t: fired.append(("x", t)))
+        loop.arm(LANE_NET, 1.0, lambda t: fired.append(("y", t)))  # replaces
+        loop.run()
+        assert fired == [("y", 1.0)]
+
+    def test_arm_dedupe_keeps_original(self, cls):
+        loop = cls()
+        fired = []
+        loop.arm(LANE_NET, 1.0, lambda t: fired.append("x"), dedupe=True)
+        loop.arm(LANE_NET, 1.0, lambda t: fired.append("y"), dedupe=True)
+        loop.run()
+        assert fired == ["x"]        # unchanged deadline: no replacement
+
+    def test_arm_after_fire_rearms(self, cls):
+        loop = cls()
+        fired = []
+
+        def fn(t):
+            fired.append(t)
+            if len(fired) < 3:
+                loop.arm(LANE_NET, t + 1.0, fn, dedupe=True)
+
+        loop.arm(LANE_NET, 1.0, fn, dedupe=True)
+        loop.run()
+        assert fired == [1.0, 2.0, 3.0] and loop.empty()
+
+    def test_disarm(self, cls):
+        loop = cls()
+        loop.arm(LANE_TICK_ := LANE_NET, 1.0, _noop)
+        assert not loop.empty()
+        loop.disarm(LANE_TICK_)
+        assert loop.empty()
+        loop.disarm(LANE_TICK_)      # idempotent
+        assert loop.empty()
+        loop.run()
+        assert loop.now == 0.0
+
+    def test_arm_slot_per_index_timers(self, cls):
+        loop = cls()
+        fired = []
+        loop.arm_slot(LANE_PREFILL, 3, 2.0, lambda i, t: fired.append((i, t)))
+        loop.arm_slot(LANE_PREFILL, 1, 1.0, lambda i, t: fired.append((i, t)))
+        loop.arm_slot(LANE_PREFILL, 2, 1.0, lambda i, t: fired.append((i, t)))
+        loop.run()
+        assert fired == [(1, 1.0), (2, 1.0), (3, 2.0)]
+
+    def test_backwards_rounding_clamps_to_now(self, cls):
+        loop = cls()
+        fired = []
+        loop.at(1.0, lambda t: loop.at(t - 1e-13, lambda u: fired.append(u)))
+        loop.at(1.0, lambda t: loop.at(t - 5.0, lambda u: fired.append(u)))
+        loop.run()
+        assert fired == [1.0, 1.0] and loop.now == 1.0
+
+    def test_trace_log_records_lanes(self, cls):
+        loop = cls()
+        loop.trace_log = []
+        loop.at(1.0, _noop)
+        loop.load_cursor(LANE_ARRIVAL, [0.5], ["a"], lambda p, t: None)
+        loop.arm(LANE_NET, 2.0, _noop)
+        loop.run()
+        assert loop.trace_log == [(0.5, LANE_ARRIVAL), (1.0, 0), (2.0, LANE_NET)]
+
+
+class TestHeapCompaction:
+    """Satellite bugfix: cancelled corpses must not balloon the heap."""
+
+    @pytest.mark.parametrize("cls", ENGINES)
+    def test_cancel_heavy_rearm_drive_keeps_heap_bounded(self, cls):
+        # The fault/rewire pattern: every network event replaces the pending
+        # completion timer via cancel + at.  Before compaction the heap held
+        # every corpse until its pop time came around (10k entries here).
+        loop = cls()
+        heap = lambda: loop._heap if cls is EventLoop else loop._gen
+        ev = None
+        for i in range(10_000):
+            if ev is not None:
+                loop.cancel(ev)
+            ev = loop.at(1e6 + i, _noop)
+        assert loop._live == 1
+        assert len(heap()) <= 66   # live + a sub-threshold corpse tail
+        loop.run()
+        assert loop.empty()
+
+    def test_compaction_preserves_pop_order(self):
+        loop = EventLoop()
+        fired = []
+        evs = [loop.at(float(i), lambda t, i=i: fired.append(i))
+               for i in range(300)]
+        for i, ev in enumerate(evs):
+            if i % 3:
+                loop.cancel(ev)  # 2/3 cancelled: corpses outnumber live
+        assert len(loop._heap) <= 2 * loop._live
+        loop.run()
+        assert fired == list(range(0, 300, 3))
+
+
+class TestEventPlaneHorizon:
+    """The batching hooks a cohort handler drives (InstancePlane._step)."""
+
+    def test_lane_horizon_scans_other_lanes_and_until(self):
+        loop = EventPlane()
+        assert loop.lane_horizon(LANE_CLOCK) == float("inf")
+        loop.arm(LANE_NET, 4.0, _noop)
+        loop.load_cursor(LANE_ARRIVAL, [3.0], ["a"], lambda p, t: None)
+        loop.arm(LANE_CLOCK, 1.0, _noop)
+        assert loop.lane_horizon(LANE_CLOCK) == 3.0   # own lane excluded
+        loop.at(2.5, _noop)
+        assert loop.lane_horizon(LANE_CLOCK) == 2.5
+
+    def test_lane_tick_advances_now_and_processed(self):
+        loop = EventPlane()
+        loop.lane_tick(LANE_CLOCK, 1.5)
+        loop.lane_ticks(LANE_CLOCK, 7)
+        assert loop.now == 1.5 and loop.processed == 8
+
+    def test_batched_log_entries_merge_and_sort(self):
+        # A horizon-batched handler reports in-window work out of time
+        # order (fused per-instance runs); the flush must restore global
+        # order and merge same-time entries into one pop, matching the
+        # reference engine's one-heap-event-per-cohort log.
+        loop = EventPlane()
+        loop.trace_log = []
+
+        def handler(t):
+            loop.lane_ticks(LANE_CLOCK, 3, times=[1.4, 1.8, 1.6])
+            loop.lane_tick(LANE_CLOCK, 1.6)
+
+        loop.arm(LANE_CLOCK, 1.2, handler)
+        loop.at(2.0, _noop)
+        loop.run()
+        assert loop.trace_log == [
+            (1.2, LANE_CLOCK), (1.4, LANE_CLOCK), (1.6, LANE_CLOCK),
+            (1.8, LANE_CLOCK), (2.0, 0),
+        ]
+
+
+# ---------------------------------------------------------------- property
+# Random API scripts: same-timestamp cohorts (grid times with duplicates),
+# cancellations (incl. of already-fired events), slot re-arms and
+# backwards-rounding at() clamps must dispatch in the identical order on
+# both engines.
+_GRID = [0.0, 0.5, 1.0, 1.0, 1.5, 2.0, 2.0, 2.0, 3.0]
+
+_op = st.one_of(
+    st.tuples(st.just("at"), st.sampled_from(_GRID)),
+    st.tuples(st.just("cancel"), st.integers(min_value=0, max_value=40)),
+    st.tuples(st.just("arm"), st.sampled_from(_GRID), st.booleans()),
+    st.tuples(st.just("slot"), st.integers(min_value=0, max_value=3),
+              st.sampled_from(_GRID)),
+    st.tuples(st.just("cursor"),
+              st.lists(st.sampled_from(_GRID), max_size=5)),
+)
+
+
+def _run_script(cls, ops):
+    loop = cls()
+    fired = []
+    events = []
+    counter = itertools.count()
+
+    def mk(tag):
+        def fn(now):
+            fired.append((now, tag))
+            k = next(counter)
+            if k % 3 == 0:
+                # rounds slightly backwards: must clamp to now, not jump
+                # the queue
+                loop.at(now - 1e-13, mk(f"{tag}/clamp"))
+            if k % 5 == 0:
+                loop.arm(LANE_NET, now + 0.25, mk(f"{tag}/net"), dedupe=True)
+        return fn
+
+    ncur = 0
+    for i, op in enumerate(ops):
+        kind = op[0]
+        if kind == "at":
+            events.append(loop.at(op[1], mk(f"at{i}")))
+        elif kind == "cancel":
+            if events:
+                loop.cancel(events[op[1] % len(events)])
+        elif kind == "arm":
+            loop.arm(LANE_NET, op[1], mk(f"arm{i}"), dedupe=op[2])
+        elif kind == "slot":
+            loop.arm_slot(LANE_PREFILL, op[1], op[2],
+                          lambda idx, now, i=i: fired.append((now, f"s{i}-{idx}")))
+        elif kind == "cursor":
+            tags = [f"c{ncur + j}" for j in range(len(op[1]))]
+            ncur += len(op[1])
+            loop.load_cursor(LANE_ARRIVAL, op[1], tags,
+                             lambda p, now: fired.append((now, p)))
+    loop.run(max_events=100_000)
+    return fired
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(_op, max_size=40))
+def test_eventplane_matches_eventloop_pop_order(ops):
+    assert _run_script(EventPlane, ops) == _run_script(EventLoop, ops)

@@ -1,0 +1,119 @@
+"""EventPlane vs the reference heap engine: bit-exact end-to-end parity.
+
+Seeded 64- and 256-GPU drives — including faults, OCS rewires, chunked
+and streamed prefill — must produce identical request outcomes (every
+per-request timestamp, placement and counter) AND identical event order
+(the engines' ``trace_log``) under ``event_engine="plane"`` vs
+``"reference"``.  Same bar as every prior plane's retirement oracle.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.sim import FaultEvent, RewireEvent, SimConfig, Simulation
+from repro.traces import generate_trace
+
+GPU64 = dict(n_pods=2, racks_per_pod=2, servers_per_rack=2)       # 64 GPUs
+GPU256 = dict(n_pods=2, racks_per_pod=8, servers_per_rack=2)      # 256 GPUs
+
+
+def _drive(engine: str, seed: int, cfg_kw: dict, rps: float = 45.0):
+    trace = generate_trace("rag", duration=7.0, target_rps=rps, seed=seed)
+    cfg = SimConfig(scheduler="netkv-full", seed=seed, warmup=2.0,
+                    measure=4.0, event_engine=engine, **cfg_kw)
+    sim = Simulation(cfg)
+    sim.loop.trace_log = []
+    metrics = sim.run(trace, drain=25.0)
+    outcomes = [
+        (rs.req.request_id, rs.prefill_instance, rs.prefill_start,
+         rs.prefill_end, rs.sched_time, rs.decode_instance, rs.tier,
+         rs.s_eff, rs.hit_tokens, rs.first_token, rs.finish, rs.tokens_out,
+         rs.rejected, rs.requeues)
+        for rs in sim.records
+    ]
+    return metrics, outcomes, sim.loop.trace_log
+
+
+def _assert_parity(cfg_kw: dict, seed: int = 0, rps: float = 45.0) -> None:
+    m_p, o_p, log_p = _drive("plane", seed, cfg_kw, rps)
+    m_r, o_r, log_r = _drive("reference", seed, cfg_kw, rps)
+    assert o_p == o_r, "request outcomes diverge between event engines"
+    assert log_p == log_r, "event (time, lane) dispatch order diverges"
+    assert m_p.ttft_mean == m_r.ttft_mean
+    assert m_p.tbt_mean == m_r.tbt_mean
+
+
+class TestEventEngineParity:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_64gpu_baseline(self, seed):
+        _assert_parity(dict(**GPU64, background=0.2), seed=seed)
+
+    def test_64gpu_static_background(self):
+        # Static background enables net-tick elision: both engines must
+        # elide identically (same grid, same wakes) and stay bit-exact.
+        _assert_parity(dict(**GPU64, background=0.0))
+
+    def test_256gpu_baseline(self):
+        _assert_parity(dict(**GPU256, background=0.15), rps=60.0)
+
+    def test_64gpu_faults(self):
+        faults = [
+            FaultEvent(time=3.0, kind="kill_decode", instance_id=4),
+            FaultEvent(time=3.5, kind="slowdown", instance_id=6, factor=1.5),
+            FaultEvent(time=4.5, kind="add_decode"),
+        ]
+        _assert_parity(dict(**GPU64, background=0.15, faults=faults))
+
+    def test_64gpu_rewires(self):
+        rewires = [
+            RewireEvent(time=3.0, scale={2: 0.25, 3: 0.25}),
+            RewireEvent(time=5.0, scale={2: 4.0, 3: 4.0}),
+        ]
+        _assert_parity(dict(**GPU64, background=0.25, rewires=rewires))
+
+    def test_64gpu_chunked_prefill(self):
+        _assert_parity(dict(**GPU64, background=0.1, chunk_tokens=512,
+                            prefill_token_budget=1024))
+
+    def test_64gpu_streamed_kv(self):
+        _assert_parity(dict(**GPU64, background=0.1, chunk_tokens=512,
+                            kv_streaming=True))
+
+    def test_256gpu_faults_and_rewires(self):
+        faults = [FaultEvent(time=3.2, kind="kill_decode", instance_id=20)]
+        rewires = [RewireEvent(time=2.8, scale={3: 0.5}),
+                   RewireEvent(time=4.8, scale={3: 2.0})]
+        _assert_parity(dict(**GPU256, background=0.2, faults=faults,
+                            rewires=rewires), rps=60.0)
+
+
+class TestNetTickElision:
+    """net_tick_mode="auto" may only skip ticks that are provably no-ops:
+    outcomes must match the keep-every-tick mode exactly."""
+
+    def test_auto_matches_always(self):
+        m_a, o_a, _ = _drive("plane", 0, dict(**GPU64, background=0.0,
+                                              net_tick_mode="auto"))
+        m_b, o_b, _ = _drive("plane", 0, dict(**GPU64, background=0.0,
+                                              net_tick_mode="always"))
+        assert o_a == o_b
+        assert m_a.ttft_mean == m_b.ttft_mean
+
+    def test_auto_elides_idle_ticks(self):
+        _, _, log_a = _drive("plane", 0, dict(**GPU64, background=0.0,
+                                              net_tick_mode="auto"))
+        _, _, log_b = _drive("plane", 0, dict(**GPU64, background=0.0,
+                                              net_tick_mode="always"))
+        from repro.sim.engine import LANE_TICK
+        ticks_a = sum(1 for _, lane in log_a if lane == LANE_TICK)
+        ticks_b = sum(1 for _, lane in log_b if lane == LANE_TICK)
+        assert ticks_a < ticks_b   # idle grid points actually skipped
+
+    def test_wandering_background_never_elides(self):
+        # wander > 0 with nonzero base utilisation: rates drift between
+        # ticks, so "auto" must keep every tick.
+        kw = dict(**GPU64, background=0.2)   # default bg_wander=0.25
+        _, _, log_a = _drive("plane", 0, dict(**kw, net_tick_mode="auto"))
+        _, _, log_b = _drive("plane", 0, dict(**kw, net_tick_mode="always"))
+        assert log_a == log_b

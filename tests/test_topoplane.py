@@ -102,7 +102,7 @@ class TestNicPolicies:
         """With one NIC per server every policy must leave the ECMP RNG
         stream untouched (bit-compat with the pre-NIC engines)."""
         tree = FatTree(nics_per_server=1)
-        for name in ("hash", "least-loaded", "rail-affine"):
+        for name in ("hash", "least-loaded", "rail-affine", "adaptive"):
             pol = make_nic_policy(name)
             rng = np.random.default_rng(3)
             probe = np.random.default_rng(3)
@@ -149,6 +149,38 @@ class TestNicPolicies:
         net.start_transfer((0, 0, 0), (0, 0, 2), 1e9, 0.0, lambda t, n: None)
         agg = sum(f.rate for f in net.flows.values())
         assert abs(agg - B1) / B1 < 1e-9   # shared nic_up caps the sum
+
+    def test_adaptive_cold_start_matches_hash(self):
+        """Before ``warm`` observations the adaptive policy must replay
+        the hash baseline bit-for-bit (same RNG draws, same picks)."""
+        tree = FatTree(nics_per_server=4)
+        ada = make_nic_policy("adaptive")
+        ref = make_nic_policy("hash")
+        rng_a, rng_b = np.random.default_rng(7), np.random.default_rng(7)
+        for _ in range(ada.warm):
+            ada.observe(1e9)   # large sizes, but still inside the warm-up
+            assert ada.pick(tree, 0, 1, rng_a) == ref.pick(tree, 0, 1, rng_b)
+        assert rng_a.integers(1 << 30) == rng_b.integers(1 << 30)
+
+    def test_adaptive_switches_on_observed_size(self):
+        tree = FatTree(nics_per_server=4)
+        ada = make_nic_policy("adaptive")
+        rng = np.random.default_rng(0)
+        # Warm up on large transfers: the EWMA settles above the threshold
+        # and the policy delegates to rail-affine (round-robin pairs).
+        for _ in range(ada.warm + 1):
+            ada.observe(1e9)
+        assert ada.ewma >= ada.threshold_bytes
+        seq = [ada.pick(tree, 0, 1, rng) for _ in range(4)]
+        assert seq == [(0, 0), (1, 1), (2, 2), (3, 3)]
+        # A long run of small transfers drags the EWMA back under the
+        # threshold: picks revert to independent hash draws.
+        for _ in range(200):
+            ada.observe(1e5)
+        assert ada.ewma < ada.threshold_bytes
+        picks = {ada.pick(tree, 0, 1, rng) for _ in range(64)}
+        assert len({p[0] for p in picks}) == 4   # both endpoints spread
+        assert len({p[1] for p in picks}) == 4
 
     def test_unknown_policy_rejected(self):
         with pytest.raises(ValueError):
@@ -295,7 +327,8 @@ class TestParityAcrossRewire:
         assert plane.tier_utilization_observed(0.0) == \
             ref.tier_utilization_observed(0.0)
 
-    @pytest.mark.parametrize("policy", ["hash", "least-loaded", "rail-affine"])
+    @pytest.mark.parametrize(
+        "policy", ["hash", "least-loaded", "rail-affine", "adaptive"])
     def test_multinic_policy_parity(self, policy):
         kw = dict(TREE_64, nics_per_server=4)
         plane, ref, da, db = _drive_pair(kw, 1, nic_policy=policy)
@@ -470,7 +503,8 @@ class TestSimulatorRewire:
             RewireEvent(time=1.5, scale={2: 0.1, 3: 0.1})])
         assert deg.xfer_mean >= ctrl.xfer_mean
 
-    @pytest.mark.parametrize("policy", ["hash", "least-loaded", "rail-affine"])
+    @pytest.mark.parametrize(
+        "policy", ["hash", "least-loaded", "rail-affine", "adaptive"])
     def test_multinic_policies_end_to_end(self, policy):
         _, m = self._run(nics_per_server=4, nic_policy=policy)
         assert m.n_measured > 0 and np.isfinite(m.ttft_mean)
