@@ -16,8 +16,10 @@ import numpy as np
 from repro.core import (
     CandidateState,
     ClusterView,
+    CohortItem,
     H100_TP4_ITER,
     RequestInfo,
+    SelfContentionTracker,
     make_reference_scheduler,
     make_scheduler,
 )
@@ -30,6 +32,13 @@ from .common import emit, write_csv
 # the two largest pools run the vectorised + jitted paths only.
 POOLS = [48, 240, 1008]
 POOLS_BIG = [4096, 16384]
+
+# DispatchPlane cohort arm: same-timestamp cohorts of R requests against
+# D-wide pools, per-request select() vs one CohortSelector walk.  CI gates
+# the 64-request / 2048-candidate point at COHORT_FLOOR x.
+COHORT_SIZES = [1, 16, 64]
+COHORT_POOLS = [1008, 2048]
+COHORT_FLOOR = 3.0
 
 REQ = RequestInfo(0, 8192, 8192 * 320 * 1024)
 
@@ -80,6 +89,84 @@ def micro_latency(pools=POOLS, with_pallas: bool = True, seed: int = 0) -> list[
     return rows
 
 
+def _cohort_case(n: int, r: int, seed: int = 0):
+    """One cohort scenario: R dispatch-ready requests, random prefix hits,
+    mixed prefill sources, against a D-wide pool snapshot."""
+    rng = np.random.default_rng(seed + 7 * n + r)
+    _, cv, view = _pool(n, seed)
+    kv = REQ.kv_bytes
+    # Prefill pool scales with the cluster (the sim's 1:3 prefill:decode
+    # split gives ~n/3 sources; keep a conservative n/32 here so some
+    # same-source invalidation still exercises the fallback path).
+    n_src = max(8, n // 32)
+    items = [
+        CohortItem(RequestInfo(k, REQ.input_len, kv),
+                   int(rng.integers(0, n_src)))
+        for k in range(r)
+    ]
+    H = rng.integers(0, REQ.input_len, (r, n)).astype(np.float64)
+    return cv, view, items, H
+
+
+def _run_sequential(sched, cv, view, items, H, infl):
+    """Per-request dispatch: fill the hit column, select, apply the delta."""
+    n = cv.n
+    out = []
+    for k, it in enumerate(items):
+        cv.hit_tokens[:n] = H[k]
+        d = sched.select(it.req, it.prefill_id, cv, view, infl)
+        out.append(d)
+        if d is not None:
+            cv.apply_assignment(cv.slot_of(d.instance_id), kv_bytes=d.s_eff)
+    return out
+
+
+def _run_cohort(sched, cv, view, items, H, infl):
+    """DispatchPlane: one fused R x D precompute, then the argmin-row walk."""
+    sel = sched.select_cohort(items, cv, view, infl, hit_matrix=H)
+    out = []
+    for k in range(len(items)):
+        d = sel.select_row(k)
+        out.append(d)
+        if d is not None:
+            cv.apply_assignment(cv.slot_of(d.instance_id), kv_bytes=d.s_eff)
+    return out
+
+
+def cohort_latency(pools=COHORT_POOLS, sizes=COHORT_SIZES,
+                   seed: int = 0) -> list[dict]:
+    """Per-decision latency: sequential select() vs the CohortSelector walk,
+    with a bit-exact decision-parity check on every (pool, cohort) point."""
+    rows = []
+    for n in pools:
+        for r in sizes:
+            cv, view, items, H = _cohort_case(n, r, seed)
+            free0 = cv.free_memory[: cv.n].copy()
+
+            def arm(runner, reps):
+                # Best-of-reps: each rep replays the same cohort from the same
+                # pool state, so min is the noise-free per-decision latency.
+                best = float("inf")
+                for rep in range(reps):
+                    cv.free_memory[: cv.n] = free0
+                    sched = make_scheduler("netkv-full", H100_TP4_ITER, 64,
+                                           seed=seed)
+                    infl = SelfContentionTracker()
+                    t0 = time.perf_counter()
+                    out = runner(sched, cv, view, items, H, infl)
+                    best = min(best, time.perf_counter() - t0)
+                return out, best / r
+
+            reps = max(5, 160 // r)
+            seq, t_seq = arm(_run_sequential, reps)
+            coh, t_coh = arm(_run_cohort, reps)
+            assert seq == coh, (
+                f"cohort decisions diverged from sequential at n={n} R={r}")
+            rows.append(dict(pool=n, cohort=r, seq_us=t_seq * 1e6,
+                             cohort_us=t_coh * 1e6, speedup=t_seq / t_coh))
+    return rows
+
+
 def run(quick: bool = False) -> list[dict]:
     # quick (the CI smoke) skips the interpret-mode Pallas arm: it measures
     # interpreter overhead, not a regression signal, and dominates wall-clock.
@@ -113,16 +200,30 @@ def run(quick: bool = False) -> list[dict]:
               f"numpy={r['numpy_ms']:.3f}ms pallas={r.get('pallas_ms', float('nan')):.3f}ms "
               f"jax={r['jax_ms']:.3f}ms speedup={r['speedup']:.1f}x")
     write_csv("sched_latency", rows)
-    return rows
+    crows = cohort_latency()
+    for r in crows:
+        print(f"  sched_latency cohort n={r['pool']} R={r['cohort']}: "
+              f"seq={r['seq_us']:.1f}us cohort={r['cohort_us']:.1f}us "
+              f"speedup={r['speedup']:.2f}x")
+    write_csv("sched_latency_cohort", crows)
+    gate = next(r for r in crows
+                if r["pool"] == 2048 and r["cohort"] == 64)
+    if gate["speedup"] < COHORT_FLOOR:
+        raise SystemExit(
+            f"cohort dispatch regression: {gate['speedup']:.2f}x at "
+            f"R=64/D=2048, floor {COHORT_FLOOR}x")
+    return rows + crows
 
 
 def main(quick: bool = False) -> None:
     t0 = time.time()
     rows = run(quick)
     big = next(r for r in rows if r["pool"] == 1008)
+    coh = next(r for r in rows if r.get("cohort") == 64 and r["pool"] == 2048)
     emit("sched_latency", (time.time() - t0) * 1e6 / max(len(rows), 1),
          f"pool{big['pool']}:py={big['python_ms']:.2f}ms,"
-         f"np={big['numpy_ms']:.3f}ms,{big['speedup']:.0f}x")
+         f"np={big['numpy_ms']:.3f}ms,{big['speedup']:.0f}x,"
+         f"cohort64@2048:{coh['speedup']:.1f}x")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ from .cost import (
     ModelKVSpec,
     PrefillTimeModel,
     effective_bandwidth,
+    effective_bandwidth_tiers,
     effective_transfer_bytes,
     first_decode_time,
     post_prefill_latency,
@@ -44,6 +45,7 @@ from .schedulers import (
     make_scheduler,
 )
 from .batch_assign import NetKVBatch
+from .dispatch import CohortItem, CohortSelector, supports_cohort
 from .reference import REFERENCE_LADDER, make_reference_scheduler
 from .propositions import (
     Prop1Instance,

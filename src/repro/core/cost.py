@@ -85,6 +85,27 @@ def effective_bandwidth(
     return tier_bw * (1.0 - c) / (1.0 + max(n_inflight, 0))
 
 
+def effective_bandwidth_tiers(
+    tier_bandwidth, congestion_by_tier, n_by_tier
+) -> "np.ndarray":
+    """Eq. (4) across all four tiers at once: B_eff per tier as a (4,) array.
+
+    Element-for-element the same IEEE operation sequence as four scalar
+    ``effective_bandwidth`` calls — the ladder's ``v_transfer_time`` and the
+    DispatchPlane's cohort scorer both gather from this row, so bit-exact
+    parity between them reduces to sharing it.
+    """
+    import numpy as np
+
+    from .oracle import TIERS
+
+    return np.array(
+        [effective_bandwidth(tier_bandwidth[t], congestion_by_tier[t],
+                             n_by_tier[t]) for t in TIERS],
+        dtype=np.float64,
+    )
+
+
 def transfer_time(
     s_eff: float, tier_bw: float, congestion: float, n_inflight: int, tier_latency: float
 ) -> float:

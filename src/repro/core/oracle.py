@@ -50,14 +50,28 @@ class OracleView:
     congestion: Mapping[int, float]
     timestamp: float = 0.0
 
+    def __post_init__(self) -> None:
+        # The per-tier arrays are a function of the (immutable) snapshot, so
+        # compute them once here instead of allocating three fresh arrays on
+        # every dispatch.  Read-only so a caller can't corrupt the cache.
+        bw = np.array([self.tier_bandwidth[t] for t in TIERS], dtype=np.float64)
+        lat = np.array([self.tier_latency[t] for t in TIERS], dtype=np.float64)
+        cong = np.array([self.congestion.get(t, 0.0) for t in TIERS],
+                        dtype=np.float64)
+        for a in (bw, lat, cong):
+            a.flags.writeable = False
+        object.__setattr__(self, "_bw_arr", bw)
+        object.__setattr__(self, "_lat_arr", lat)
+        object.__setattr__(self, "_cong_arr", cong)
+
     def bandwidth_array(self) -> np.ndarray:
-        return np.array([self.tier_bandwidth[t] for t in TIERS], dtype=np.float64)
+        return self._bw_arr
 
     def latency_array(self) -> np.ndarray:
-        return np.array([self.tier_latency[t] for t in TIERS], dtype=np.float64)
+        return self._lat_arr
 
     def congestion_array(self) -> np.ndarray:
-        return np.array([self.congestion.get(t, 0.0) for t in TIERS], dtype=np.float64)
+        return self._cong_arr
 
     def est_transfer_time(
         self,

@@ -39,7 +39,7 @@ import numpy as np
 
 from .cost import (
     IterTimeModel,
-    effective_bandwidth,
+    effective_bandwidth_tiers,
     transfer_time,
 )
 from .oracle import OracleView, SelfContentionTracker, EWMACongestionPredictor, TIERS
@@ -138,10 +138,7 @@ def v_transfer_time(
     the tail too); the defaults leave the serial op sequence untouched
     (bit-identical to the reference loop).
     """
-    beff = np.array(
-        [effective_bandwidth(tier_bandwidth[t], congestion_by_tier[t], n_by_tier[t])
-         for t in TIERS], np.float64,
-    )
+    beff = effective_bandwidth_tiers(tier_bandwidth, congestion_by_tier, n_by_tier)
     lat = np.array([tier_latency[t] for t in TIERS], np.float64)
     lat_row = lat[tier_row]
     if prefill_remaining > 0.0 or tail_bytes is not None:
@@ -223,6 +220,30 @@ class Scheduler:
         inflight: Optional[SelfContentionTracker] = None,
     ) -> Optional[Decision]:
         raise NotImplementedError
+
+    def select_cohort(
+        self,
+        items,  # Sequence[dispatch.CohortItem]
+        cands,  # ClusterView | Sequence[CandidateState]
+        oracle: OracleView,
+        inflight: Optional[SelfContentionTracker] = None,
+        *,
+        hit_matrix,
+        hit_fn=None,
+        evictions_fn=None,
+    ):
+        """Batched R-request selection (DispatchPlane, ``core/dispatch.py``).
+
+        Returns a ``CohortSelector`` whose ``select_row(k)`` walk is
+        bit-identical — decisions, RNG tie-break stream, side effects — to
+        R sequential ``select`` calls against the live view.
+        """
+        from .dispatch import CohortSelector  # cycle-free late import
+
+        return CohortSelector(
+            self, items, as_cluster_view(cands, oracle), oracle, inflight,
+            hit_matrix=hit_matrix, hit_fn=hit_fn, evictions_fn=evictions_fn,
+        )
 
 
 class RoundRobin(Scheduler):

@@ -122,6 +122,22 @@ class ClusterView:
         """Active slice of one column (no copy)."""
         return getattr(self, name)[: self.n]
 
+    # ------------------------------------------------------------ cohort apply
+    def apply_assignment(self, slot: int, *, kv_bytes: float = 0.0,
+                         queued_delta: int = 0, batch_delta: int = 0) -> None:
+        """O(1) column delta for one cohort assignment.
+
+        Between the argmin rows of a batched dispatch only the *winning*
+        slot's scheduler-visible scalars move (memory pinned at reserve,
+        queue/batch deltas); this applies exactly that delta without a full
+        engine resync.  ``free_memory`` clamps at zero like every writer.
+        """
+        self.free_memory[slot] = max(self.free_memory[slot] - kv_bytes, 0.0)
+        if queued_delta:
+            self.queued[slot] += queued_delta
+        if batch_delta:
+            self.batch[slot] += batch_delta
+
     # ----------------------------------------------------------------- compat
     @classmethod
     def from_candidates(cls, cands: Sequence, tier_fn=None) -> "ClusterView":

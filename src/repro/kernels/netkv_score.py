@@ -23,15 +23,46 @@ LANES = 128
 BIG = 3.0e38
 
 
-def _score_kernel(scal_ref, free_ref, queued_ref, batch_ref, hit_ref, tier_ref,
-                  healthy_ref, scale_ref, bw_ref, lat_ref, cong_ref, infl_ref,
-                  cost_ref, best_ref, *, n_real: int):
-    s_r = scal_ref[0]
-    l_r = scal_ref[1]
-    iter_a = scal_ref[2]
-    iter_b = scal_ref[3]
-    m_min = scal_ref[4]
-    beta_max = scal_ref[5]
+def netkv_score(free_mem, queued, batch, hit_tokens, tier, healthy, iter_scale,
+                tier_bw, tier_lat, congestion, n_inflight,
+                *, s_r: float, input_len: float, iter_a: float, iter_b: float,
+                m_min: float, beta_max: int, interpret: bool = False):
+    """All candidate arrays are (D,).  Returns (costs (D,), best_idx ()).
+
+    Single-row view of :func:`netkv_score_cohort` — one program serves both
+    the sequential selector and the cohort dispatch path, which is what makes
+    their costs bit-identical (two differently-shaped XLA programs are free
+    to fuse/FMA differently; one shared program is not).
+    """
+    costs, best = netkv_score_cohort(
+        free_mem, queued, batch,
+        jnp.asarray(hit_tokens, jnp.float32).reshape(1, -1),
+        jnp.asarray(tier, jnp.int32).reshape(1, -1),
+        healthy, iter_scale, tier_bw, tier_lat, congestion,
+        jnp.asarray(n_inflight, jnp.float32).reshape(1, 4),
+        s_r=[s_r], input_len=[input_len], iter_a=iter_a, iter_b=iter_b,
+        m_min=m_min, beta_max=beta_max, interpret=interpret,
+    )
+    return costs[0], best[0]
+
+
+def _score_cohort_kernel(scal_ref, free_ref, queued_ref, batch_ref, hit_ref,
+                         tier_ref, healthy_ref, scale_ref, rscal_ref, bw_ref,
+                         lat_ref, cong_ref, infl_ref, cost_ref, best_ref,
+                         *, n_real: int):
+    """One grid step per cohort row: Eq. (2)-(7) + masked argmin, with the
+    per-request scalars (s_r, l_r) riding a rowed block — row i is
+    bit-identical to a single-row ``netkv_score`` call on the same snapshot.
+    The per-row scalars deliberately arrive as a *block* rather than as
+    ``scal_ref[base + program_id]``: a traced gather index changes XLA's
+    fusion/FMA decisions for everything downstream, which costs bit-parity
+    across cohort sizes (observed as 1-ulp cost drift off-TPU)."""
+    s_r = rscal_ref[0, 0]
+    l_r = rscal_ref[0, 1]
+    iter_a = scal_ref[0]
+    iter_b = scal_ref[1]
+    m_min = scal_ref[2]
+    beta_max = scal_ref[3]
 
     hit = jnp.minimum(hit_ref[...], l_r)
     s_eff = s_r * (1.0 - hit / jnp.maximum(l_r, 1.0))                    # Eq. (2)
@@ -59,48 +90,133 @@ def _score_kernel(scal_ref, free_ref, queued_ref, batch_ref, hit_ref, tier_ref,
     best_ref[0, 0] = jnp.argmin(cost[0]).astype(jnp.int32)
 
 
-def netkv_score(free_mem, queued, batch, hit_tokens, tier, healthy, iter_scale,
-                tier_bw, tier_lat, congestion, n_inflight,
-                *, s_r: float, input_len: float, iter_a: float, iter_b: float,
-                m_min: float, beta_max: int, interpret: bool = False):
-    """All candidate arrays are (D,).  Returns (costs (D,), best_idx ())."""
-    d = free_mem.shape[0]
+def netkv_score_cohort(free_mem, queued, batch, hit_rows, tier_rows, healthy,
+                       iter_scale, tier_bw, tier_lat, congestion, infl_rows,
+                       *, s_r, input_len, iter_a: float, iter_b: float,
+                       m_min: float, beta_max: int, interpret: bool = False,
+                       numpy: bool = False):
+    """Cohort-axis ``netkv_score``: R requests against one D-wide snapshot.
+
+    Pool columns (free_mem/queued/batch/healthy/iter_scale) are (D,) and
+    shared; ``hit_rows``/``tier_rows`` are (R, D) and ``infl_rows``/``s_r``/
+    ``input_len`` are per-row (self-contention and KV size vary with the
+    prefill source).  Returns (costs (R, D), best (R,)) where row i matches
+    a single-row ``netkv_score`` call bit-for-bit (same f32 op sequence,
+    grid-stepped over the cohort axis).  ``numpy=True`` routes through the
+    f32 NumPy twin — the fallback when no XLA backend is usable.
+    """
+    if numpy:
+        return _netkv_score_cohort_np(
+            free_mem, queued, batch, hit_rows, tier_rows, healthy, iter_scale,
+            tier_bw, tier_lat, congestion, infl_rows, s_r=s_r,
+            input_len=input_len, iter_a=iter_a, iter_b=iter_b, m_min=m_min,
+            beta_max=beta_max)
+    r, d = hit_rows.shape[0], free_mem.shape[0]
     dp = -(-d // LANES) * LANES
     pad = dp - d
+
+    hit_rows = jnp.asarray(hit_rows, jnp.float32)
+    tier_rows = jnp.asarray(tier_rows, jnp.int32)
+    infl_rows = jnp.asarray(infl_rows, jnp.float32).reshape(r, 4)
+    s_rv = jnp.asarray(s_r, jnp.float32).reshape(r)
+    l_rv = jnp.asarray(input_len, jnp.float32).reshape(r)
+    rq = r
+    if r == 1:
+        # grid=(1,) unrolls the body and XLA fuses the unrolled program
+        # differently than the r>=2 grid loop (ulp-level cost drift).  Pad
+        # to two identical rows so every call — any cohort size, and the
+        # single-row ``netkv_score`` wrapper — runs the same loop program.
+        hit_rows = jnp.concatenate([hit_rows, hit_rows])
+        tier_rows = jnp.concatenate([tier_rows, tier_rows])
+        infl_rows = jnp.concatenate([infl_rows, infl_rows])
+        s_rv = jnp.concatenate([s_rv, s_rv])
+        l_rv = jnp.concatenate([l_rv, l_rv])
+        r = 2
 
     def prep(x, dtype=jnp.float32):
         x = jnp.asarray(x, dtype)
         if pad:
-            x = jnp.pad(x, (0, pad))
-        return x.reshape(1, dp)
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        return x.reshape(-1, dp)
 
-    scal = jnp.asarray([s_r, input_len, iter_a, iter_b, m_min, float(beta_max)],
-                       jnp.float32)
-    kernel = functools.partial(_score_kernel, n_real=d)
+    scal = jnp.asarray([iter_a, iter_b, m_min, float(beta_max)], jnp.float32)
+    rscal = jnp.stack([s_rv, l_rv, jnp.zeros(r, jnp.float32),
+                       jnp.zeros(r, jnp.float32)], axis=1)
+    kernel = functools.partial(_score_cohort_kernel, n_real=d)
+    shared = pl.BlockSpec((1, dp), lambda i, s: (0, 0))
+    rowed = pl.BlockSpec((1, dp), lambda i, s: (i, 0))
     costs, best = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(1,),
-            in_specs=[pl.BlockSpec((1, dp), lambda i, s: (0, 0))] * 7
-            + [pl.BlockSpec((1, 4), lambda i, s: (0, 0))] * 4,
+            grid=(r,),
+            in_specs=[shared, shared, shared, rowed, rowed, shared, shared]
+            + [pl.BlockSpec((1, 4), lambda i, s: (i, 0))]
+            + [pl.BlockSpec((1, 4), lambda i, s: (0, 0))] * 3
+            + [pl.BlockSpec((1, 4), lambda i, s: (i, 0))],
             out_specs=[
-                pl.BlockSpec((1, dp), lambda i, s: (0, 0)),
-                pl.BlockSpec((1, 1), lambda i, s: (0, 0), memory_space=pltpu.SMEM),
+                rowed,
+                pl.BlockSpec((1, 1), lambda i, s: (i, 0),
+                             memory_space=pltpu.SMEM),
             ],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((1, dp), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((r, dp), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
         ],
         interpret=interpret,
     )(
         scal,
-        prep(free_mem), prep(queued), prep(batch), prep(hit_tokens),
-        prep(tier, jnp.int32), prep(healthy), prep(iter_scale),
+        prep(free_mem), prep(queued), prep(batch), prep(hit_rows),
+        prep(tier_rows, jnp.int32), prep(healthy), prep(iter_scale), rscal,
         jnp.asarray(tier_bw, jnp.float32).reshape(1, 4),
         jnp.asarray(tier_lat, jnp.float32).reshape(1, 4),
         jnp.asarray(congestion, jnp.float32).reshape(1, 4),
-        jnp.asarray(n_inflight, jnp.float32).reshape(1, 4),
+        infl_rows,
     )
-    return costs[0, :d], best[0, 0]
+    return costs[:rq, :d], best[:rq, 0]
+
+
+def _netkv_score_cohort_np(free_mem, queued, batch, hit_rows, tier_rows,
+                           healthy, iter_scale, tier_bw, tier_lat, congestion,
+                           infl_rows, *, s_r, input_len, iter_a, iter_b,
+                           m_min, beta_max):
+    """f32 NumPy twin of the cohort kernel (same op order, no XLA)."""
+    import numpy as np
+
+    f32 = np.float32
+    d = free_mem.shape[0]
+    free = np.asarray(free_mem, f32)[None, :]
+    que = np.asarray(queued, f32)[None, :]
+    bat = np.asarray(batch, f32)[None, :]
+    hlt = np.asarray(healthy, f32)[None, :]
+    scl = np.asarray(iter_scale, f32)[None, :]
+    hit_rows = np.asarray(hit_rows, f32)
+    tier = np.asarray(tier_rows, np.int32)
+    bw = np.asarray(tier_bw, f32)
+    lat4 = np.asarray(tier_lat, f32)
+    cong = np.asarray(congestion, f32)
+    infl = np.asarray(infl_rows, f32)
+    s_rv = np.asarray(s_r, f32)[:, None]
+    l_rv = np.asarray(input_len, f32)[:, None]
+    a, b = f32(iter_a), f32(iter_b)
+    mm, bm = f32(m_min), f32(float(beta_max))
+
+    hit = np.minimum(hit_rows, l_rv)
+    s_eff = s_rv * (f32(1.0) - hit / np.maximum(l_rv, f32(1.0)))
+    beff = np.zeros_like(s_eff)
+    lat = np.zeros_like(s_eff)
+    for t in range(4):
+        sel = (tier == t).astype(f32)
+        bt = bw[t] * (f32(1.0) - cong[t]) / (f32(1.0) + infl[:, t:t + 1])
+        beff = beff + sel * bt
+        lat = lat + sel * lat4[t]
+    t_xfer = s_eff / np.maximum(beff, f32(1e-9)) + lat
+    t_iter = (a + b * bat) * scl
+    blocked = np.maximum(f32(0.0), que - (bm - bat))
+    t_queue = blocked * t_iter
+    t_dec = (a + b * (bat + f32(1.0))) * scl
+    cost = t_xfer + t_queue + t_dec
+    feasible = (hlt > f32(0.5)) & (free >= s_eff + mm)
+    cost = np.where(feasible, cost, f32(BIG))
+    return cost[:, :d], np.argmin(cost, axis=1).astype(np.int32)

@@ -67,10 +67,32 @@ _INF = float("inf")
 # (lane name, handler qualname) -> [count, seconds].
 _PROFILE: dict | None = None
 
+# Scheduler-select accumulator: the simulator reports each select's wall
+# time via note_select(); the run loops debit it from the owning handler's
+# row and credit a dedicated ("select", ...) row, so event_profile.csv
+# separates decision time from the event plumbing that hosts it.
+_SELECT_ACC = [0.0, 0]          # [seconds, count] since profiling enabled
+
 
 def enable_profiling(on: bool = True) -> None:
     global _PROFILE
     _PROFILE = {} if on else None
+    _SELECT_ACC[0] = 0.0
+    _SELECT_ACC[1] = 0
+
+
+def note_select(seconds: float, name: str = "scheduler.select") -> None:
+    """Report one scheduler-select's wall time (no-op unless profiling)."""
+    if _PROFILE is not None:
+        _SELECT_ACC[0] += seconds
+        _SELECT_ACC[1] += 1
+        key = ("select", name)
+        ent = _PROFILE.get(key)
+        if ent is None:
+            _PROFILE[key] = [1, seconds]
+        else:
+            ent[0] += 1
+            ent[1] += seconds
 
 
 def profile_rows() -> list[dict]:
@@ -91,7 +113,8 @@ def _handler_name(fn) -> str:
 
 
 class Event:
-    __slots__ = ("time", "seq", "fn", "cancelled", "lane")
+    __slots__ = ("time", "seq", "fn", "cancelled", "lane",
+                 "slot_idx", "slot_fn")
 
     def __init__(self, time: float, seq: int, fn: Callable[[float], None],
                  lane: int = LANE_GENERIC):
@@ -100,6 +123,11 @@ class Event:
         self.fn = fn
         self.cancelled = False
         self.lane = lane
+        # arm_slot() wraps the handler in a closure; drain_due() needs the
+        # raw (idx, fn) pair to recognise same-handler events, so arm_slot
+        # records them here.  None for every other enqueue path.
+        self.slot_idx = None
+        self.slot_fn = None
 
     def __lt__(self, other: "Event") -> bool:
         return (self.time, self.seq) < (other.time, other.seq)
@@ -182,7 +210,39 @@ class EventLoop:
 
     def arm_slot(self, lane: int, idx: int, time: float, fn) -> None:
         """Per-index one-shot timer; never cancelled (handlers guard)."""
-        self.at(time, (lambda now, i=idx, f=fn: f(i, now)), lane=lane)
+        ev = self.at(time, (lambda now, i=idx, f=fn: f(i, now)), lane=lane)
+        ev.slot_idx = idx
+        ev.slot_fn = fn
+
+    def drain_due(self, lane: int, fn) -> list[int]:
+        """Pop every next-in-order ``arm_slot`` event due right now.
+
+        Collects the contiguous run of heap heads that fire at ``now`` on
+        ``lane`` with handler ``fn`` — exactly the events ``run()`` would
+        dispatch back-to-back next — and consumes them (processed counts,
+        trace entries) so the caller can handle the whole same-timestamp
+        cohort in one pass.  Stops at the first non-matching head: an
+        interleaved event on another lane keeps its place in global order.
+        """
+        out: list[int] = []
+        heap = self._heap
+        while heap:
+            ev = heap[0]
+            if ev.cancelled:
+                heapq.heappop(heap)
+                continue
+            # Equality, not identity: handlers are bound methods, and each
+            # attribute access creates a fresh bound-method object.
+            if ev.time != self.now or ev.lane != lane or ev.slot_fn != fn:
+                break
+            heapq.heappop(heap)
+            ev.cancelled = True
+            self._live -= 1
+            self.processed += 1
+            if self.trace_log is not None:
+                self.trace_log.append((ev.time, ev.lane))
+            out.append(ev.slot_idx)
+        return out
 
     def lane_horizon(self, lane: int) -> float:
         return self.now     # batched is False: callers never batch on this
@@ -223,8 +283,12 @@ class EventLoop:
                 ev.fn(self.now)
             else:
                 t0 = _time.perf_counter()
+                s0 = _SELECT_ACC[0]
                 ev.fn(self.now)
-                dt = _time.perf_counter() - t0
+                # Debit scheduler-select time reported via note_select():
+                # it is credited to the dedicated ("select", ...) row, so
+                # the owning handler's row shows event plumbing only.
+                dt = _time.perf_counter() - t0 - (_SELECT_ACC[0] - s0)
                 key = (LANE_NAMES[ev.lane], _handler_name(ev.fn))
                 ent = prof.get(key)
                 if ent is None:
@@ -386,6 +450,52 @@ class EventPlane:
         heapq.heappush(self._mslot, (eff, next(self._seq), idx, fn))
         self._live += 1
 
+    def _globally_next(self, t: float, seq: int) -> bool:
+        """No event on any other lane precedes (t, seq) in dispatch order."""
+        gen = self._gen
+        while gen and gen[0].cancelled:
+            heapq.heappop(gen)
+        if gen and (gen[0].time, gen[0].seq) < (t, seq):
+            return False
+        for l in _CURSOR_LANES:
+            ts = self._cur_t[l]
+            if ts is not None:
+                pos = self._cur_pos[l]
+                if pos < len(ts) and (ts[pos], self._cur_seq[l][pos]) < (t, seq):
+                    return False
+        for l in _SLOT_LANES:
+            slot = self._slot[l]
+            if slot is not None and (slot[1], slot[2]) < (t, seq):
+                return False
+        return True
+
+    def drain_due(self, lane: int, fn) -> list[int]:
+        """Pop every next-in-order ``arm_slot`` event due right now.
+
+        Multi-slot counterpart of :meth:`EventLoop.drain_due`: consumes the
+        run of ``_mslot`` heads that fire at ``now`` with handler ``fn`` and
+        are globally next (no pending event on any other lane ties in ahead
+        of them by sequence), so the caller can batch the same-timestamp
+        cohort.  Each drained event is counted and traced as if ``run()``
+        had dispatched it.
+        """
+        out: list[int] = []
+        ms = self._mslot
+        while ms:
+            m = ms[0]
+            # Equality, not identity: bound-method handlers are fresh
+            # objects at every attribute access.
+            if m[0] != self.now or m[3] != fn \
+                    or not self._globally_next(m[0], m[1]):
+                break
+            heapq.heappop(ms)
+            self._live -= 1
+            self.processed += 1
+            if self.trace_log is not None:
+                self.trace_log.append((m[0], lane))
+            out.append(m[2])
+        return out
+
     # ------------------------------------------------------ batching hooks
     def lane_horizon(self, lane: int) -> float:
         """Earliest pending time on any lane but ``lane`` (and ``until``).
@@ -509,6 +619,7 @@ class EventPlane:
                 self.trace_log.append((best_t, lane))
             if prof is not None:
                 t0 = _time.perf_counter()
+                s0 = _SELECT_ACC[0]
             if lane == LANE_GENERIC:
                 ev = heapq.heappop(gen)
                 ev.cancelled = True         # consumed: late cancel is a no-op
@@ -530,7 +641,8 @@ class EventPlane:
                 fn = m[3]
                 fn(m[2], best_t)
             if prof is not None:
-                dt = _time.perf_counter() - t0
+                # Same select-time debit as the reference loop (see above).
+                dt = _time.perf_counter() - t0 - (_SELECT_ACC[0] - s0)
                 key = (LANE_NAMES[lane], _handler_name(fn))
                 ent = prof.get(key)
                 if ent is None:

@@ -368,17 +368,23 @@ class ChunkPlane:
         # rotate to the back (behind arrivals that landed mid-iteration).
         self.streams[s] = streams[n_live:] + rotated
         # Phase 3: callbacks, in served order; skip entries a previous
-        # callback cancelled (requeued mid-phase).
-        for st in live:
-            if st.cancelled:
-                continue
-            rs = st.rs
-            if owner.on_chunk_done is not None:
-                owner.on_chunk_done(rs, st.done, now)
-            if st.done >= rs.req.input_len:
-                rs.prefill_end = now
-                if owner.on_prefill_done is not None:
-                    owner.on_prefill_done(rs, now)
+        # callback cancelled (requeued mid-phase).  With cohort dispatch
+        # enabled, a multi-stream iteration hands the whole served batch
+        # over in one call so same-instant selections fuse (the handler
+        # replicates this loop's per-stream semantics exactly).
+        if owner.on_phase3_cohort is not None and len(live) > 1:
+            owner.on_phase3_cohort(live, now)
+        else:
+            for st in live:
+                if st.cancelled:
+                    continue
+                rs = st.rs
+                if owner.on_chunk_done is not None:
+                    owner.on_chunk_done(rs, st.done, now)
+                if st.done >= rs.req.input_len:
+                    rs.prefill_end = now
+                    if owner.on_prefill_done is not None:
+                        owner.on_prefill_done(rs, now)
         self._maybe_start(s, now)
 
 
@@ -403,6 +409,12 @@ class InstancePlane:
         self.chunk_tokens = chunk_tokens
         self.on_prefill_done: Callable[[RequestState, float], None] | None = None
         self.on_chunk_done: Callable[[RequestState, int, float], None] | None = None
+        # Cohort dispatch hooks (SimConfig.dispatch_mode="plane"): when set,
+        # same-timestamp prefill completions are handed over as one batch so
+        # the simulator can run a single fused R x D selection instead of R
+        # sequential ones.  None keeps the per-request paths untouched.
+        self.on_prefill_cohort: Callable[[list, float], None] | None = None
+        self.on_phase3_cohort: Callable[[list, float], None] | None = None
         self._on_first_token: Callable | None = None
         self._on_finish: Callable | None = None
 
@@ -566,6 +578,32 @@ class InstancePlane:
         rs = self.p_running[s]
         if rs is None:
             return
+        if self.on_prefill_cohort is not None:
+            # Cohort dispatch: absorb every other prefill completion due at
+            # this exact instant (they are the engine's next dispatches
+            # anyway — drain_due only takes heads that precede all other
+            # pending events), mark them all finished, then hand the batch
+            # to the simulator for one fused selection.  Successor prefills
+            # start after the dispatches, matching the per-event order for
+            # everything observable: a prefill start only arms a strictly
+            # future timer and touches no decode state.
+            drained = self.loop.drain_due(LANE_PREFILL, self._prefill_finish)
+            slots = [s] + drained
+            batch: list[RequestState] = []
+            for s2 in slots:
+                rs2 = self.p_running[s2]
+                if rs2 is None:
+                    continue
+                rs2.prefill_end = now
+                self.p_running[s2] = None
+                batch.append(rs2)
+            if len(batch) > 1:
+                self.on_prefill_cohort(batch, now)
+            elif batch and self.on_prefill_done is not None:
+                self.on_prefill_done(batch[0], now)
+            for s2 in slots:
+                self._prefill_start(s2, now)
+            return
         rs.prefill_end = now
         self.p_running[s] = None
         if self.on_prefill_done is not None:
@@ -628,6 +666,16 @@ class InstancePlane:
     def hit_tokens(self, iid: int, req: Request) -> float:
         return float(self.cache.hit_tokens(
             self.view.slot_of(iid), req.block_hashes, req.input_len))
+
+    def hit_rows(self, reqs) -> np.ndarray:
+        """lambda_r(d) for a dispatch cohort: (R, D) hit-token matrix in one
+        pass over the shared presence bitmask (see RadixPlane.hit_rows)."""
+        return self.cache.hit_rows(reqs)
+
+    def evictions_of(self, iid: int) -> int:
+        """Cumulative eviction count for one instance (cohort-dispatch
+        staleness watch: a changed count invalidates cached hit rows)."""
+        return int(self.cache.evictions[self.view.slot_of(iid)])
 
     # -------------------------------------------------------------- lifecycle
     def reserve(self, iid: int, rs: RequestState, now: float) -> None:

@@ -225,7 +225,13 @@ class RadixPlane:
         if not ids or n == 0:
             res[:n] = 0.0
             return res
-        idv = np.asarray(ids, np.intp)
+        lcp = self._lcp_row(np.asarray(ids, np.intp))
+        np.minimum(lcp * B_TOK, float(input_len), out=res[:n])
+        return res
+
+    def _lcp_row(self, idv: np.ndarray) -> np.ndarray:
+        """(n,) leading-ones LCP block count for one interned-id prefix."""
+        n = self.n
         lcp = np.zeros(n, np.int64)
         alive = np.arange(n, dtype=np.intp)
         word, bit = self._word, self._bit
@@ -238,8 +244,36 @@ class RadixPlane:
             alive = alive[~anybad]
             if alive.size == 0:
                 break
-        np.minimum(lcp * B_TOK, float(input_len), out=res[:n])
-        return res
+        return lcp
+
+    def hit_rows(self, reqs: Sequence) -> np.ndarray:
+        """Stacked ``hit_row`` for a dispatch cohort: the (R, n) lambda matrix.
+
+        Shared prefixes are the common case inside a same-timestamp cohort
+        (agentic trees, RAG fan-out), so identical interned-id prefixes reuse
+        one broadcast LCP through a tuple-keyed memo.  Row k is bit-identical
+        to ``hit_row(reqs[k].block_hashes, reqs[k].input_len)`` against the
+        cache state at call time.
+        """
+        n = self.n
+        H = np.zeros((len(reqs), n), np.float64)
+        intern = self._intern
+        memo: dict[tuple, np.ndarray] = {}
+        for k, req in enumerate(reqs):
+            ids: list[int] = []
+            for h in req.block_hashes:
+                bid = intern.get(h)
+                if bid is None:
+                    break
+                ids.append(bid)
+            if not ids or n == 0:
+                continue
+            key = tuple(ids)
+            lcp = memo.get(key)
+            if lcp is None:
+                memo[key] = lcp = self._lcp_row(np.asarray(ids, np.intp))
+            np.minimum(lcp * B_TOK, float(req.input_len), out=H[k])
+        return H
 
     def touch(self, s: int, hashes: Sequence[Hashable]) -> None:
         """Mark blocks as recently used (move to MRU end of the clock log)."""

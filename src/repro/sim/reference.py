@@ -548,6 +548,20 @@ class ReferenceInstanceEngine:
     def hit_tokens(self, iid: int, req) -> float:
         return float(self._by_id[iid].hit_tokens(req))
 
+    def hit_rows(self, reqs):
+        """(R, D) hit-token matrix for a dispatch cohort (protocol totality
+        with InstancePlane.hit_rows; per-object walks, no bitmask)."""
+        import numpy as np
+
+        H = np.zeros((len(reqs), len(self.decode)), np.float64)
+        for k, req in enumerate(reqs):
+            for d in self.decode:
+                H[k, d.slot] = float(d.hit_tokens(req))
+        return H
+
+    def evictions_of(self, iid: int) -> int:
+        return int(self._by_id[iid].cache.evictions)
+
     def reserve(self, iid: int, rs, now: float) -> None:
         self._by_id[iid].reserve(rs, now)
 

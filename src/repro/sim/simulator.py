@@ -42,6 +42,7 @@ from repro.core.cost import (
     ModelKVSpec,
     PrefillTimeModel,
 )
+from repro.core.dispatch import CohortItem, supports_cohort
 from repro.core.oracle import NetworkCostOracle, SelfContentionTracker
 from repro.core.schedulers import RequestInfo, make_scheduler
 from repro.core.batch_assign import NetKVBatch
@@ -57,6 +58,7 @@ from .engine import (
     LANE_REWIRE,
     LANE_TICK,
     make_event_loop,
+    note_select,
 )
 from .instances import InstancePlane, RequestState
 from .metrics import RunMetrics, summarize
@@ -150,6 +152,15 @@ class SimConfig:
     # identical either way).
     net_tick_mode: str = "auto"             # "auto" | "always"
     event_engine: str = "plane"             # "plane" | "reference"
+    # DispatchPlane: "plane" batches every same-timestamp cohort of
+    # dispatch-ready requests through one fused R x D selection
+    # (core/dispatch.py — bit-exact vs the per-request path, including the
+    # RNG tie-break stream); "reference" keeps one Scheduler.select call
+    # per request.  "plane" silently degrades to per-request selection for
+    # schedulers without a cohort path (netkv-batch, netkv-multihop), the
+    # reference instance engine, or a zero oracle refresh interval (where
+    # each sequential select would legitimately observe fresher telemetry).
+    dispatch_mode: str = "plane"            # "plane" | "reference"
     staging_capacity: float = 512e9         # per-pod DRAM KV store (multihop)
 
 
@@ -265,6 +276,18 @@ class Simulation:
         self.engine.on_prefill_done = self._on_prefill_done
         if cfg.kv_streaming:
             self.engine.on_chunk_done = self._on_chunk_done
+        if cfg.dispatch_mode not in ("plane", "reference"):
+            raise ValueError(f"unknown dispatch_mode {cfg.dispatch_mode!r}")
+        self._cohort_ok = (
+            cfg.dispatch_mode == "plane"
+            and isinstance(self.engine, InstancePlane)
+            and supports_cohort(self.sched)
+            and cfg.oracle_refresh > 0
+        )
+        if self._cohort_ok:
+            self.engine.on_prefill_cohort = self._prefill_cohort
+            if cfg.chunk_tokens is not None:
+                self.engine.on_phase3_cohort = self._phase3_cohort
         self.engine.set_decode_callbacks(lambda rs, now: None,
                                          lambda rs, now: None)
 
@@ -401,8 +424,8 @@ class Simulation:
         """Refresh the per-request hit_tokens scratch column in-place."""
         self.engine.fill_hits(req)
 
-    def _schedule_one(self, rs: RequestState, now: float,
-                      streaming: bool = False) -> None:
+    def _make_info(self, rs: RequestState, streaming: bool,
+                   tokens_ready: int = 0) -> RequestInfo:
         req = rs.req
         info = RequestInfo(req.request_id, req.input_len, rs.kv_bytes)
         if streaming:
@@ -411,9 +434,15 @@ class Simulation:
             # the final-chunk tail can only enter the network at the end —
             # the ladder's T_xfer column credits the overlap accordingly.
             info.prefill_remaining = self.cfg.prefill_model.c * max(
-                req.input_len - rs.tokens_ready, 0)
+                req.input_len - tokens_ready, 0)
             info.tail_bytes = rs.kv_bytes * (
                 min(self._chunk_eff, req.input_len) / req.input_len)
+        return info
+
+    def _schedule_one(self, rs: RequestState, now: float,
+                      streaming: bool = False) -> None:
+        req = rs.req
+        info = self._make_info(rs, streaming, rs.tokens_ready)
         self._fill_hits(req)
         view = self.oracle.view(now)
         if isinstance(self.sched, NetKVMultiHop):
@@ -421,7 +450,9 @@ class Simulation:
         t0 = _time.perf_counter()
         decision = self.sched.select(info, rs.prefill_instance, self.view, view,
                                      self.inflight)
-        self.decision_latencies.append(_time.perf_counter() - t0)
+        dt = _time.perf_counter() - t0
+        self.decision_latencies.append(dt)
+        note_select(dt)
         if decision is None:
             rs.rejected = True
             self.rejected += 1
@@ -430,6 +461,113 @@ class Simulation:
             self._dispatch_stream(rs, decision, now)
         else:
             self._dispatch(rs, decision, now)
+
+    # --------------------------------------------------- cohort dispatch
+    def _cohort_selector(self, items, reqs, now: float):
+        """One fused R x D selection for a same-timestamp dispatch cohort.
+
+        The stacked hit matrix and the oracle snapshot play the role of the
+        per-request ``_fill_hits`` + ``oracle.view`` calls (untimed on the
+        sequential path too); ``hit_fn``/``evictions_fn`` wire the selector's
+        reserve-time eviction watch to the live caches.
+        """
+        H = self.engine.hit_rows(reqs)
+        view = self.oracle.view(now)
+        return self.sched.select_cohort(
+            items, self.view, view, self.inflight,
+            hit_matrix=H,
+            hit_fn=lambda r, iid: self.engine.hit_tokens(iid, reqs[r]),
+            evictions_fn=self.engine.evictions_of,
+        )
+
+    def _schedule_row(self, sel, k: int, rs: RequestState, now: float,
+                      streaming: bool = False) -> None:
+        """Cohort-path twin of ``_schedule_one``: row k's batched decision,
+        with the cohort's one-time setup cost folded into the first row's
+        latency so the per-decision metric stays comparable."""
+        t0 = _time.perf_counter()
+        decision = sel.select_row(k)
+        dt = (_time.perf_counter() - t0) + sel.take_setup_time()
+        self.decision_latencies.append(dt)
+        note_select(dt)
+        if decision is None:
+            rs.rejected = True
+            self.rejected += 1
+            return
+        if streaming:
+            self._dispatch_stream(rs, decision, now)
+        else:
+            self._dispatch(rs, decision, now)
+
+    def _prefill_cohort(self, batch, now: float) -> None:
+        """Serial-prefill cohort hook: every prefill completing at this
+        instant dispatches through one fused selection, each row's Decision
+        (and its reserve / self-contention side effects) applied before the
+        next row — bit-exact vs per-request ``_on_prefill_done`` calls."""
+        items = [CohortItem(self._make_info(rs, False), rs.prefill_instance)
+                 for rs in batch]
+        sel = self._cohort_selector(items, [rs.req for rs in batch], now)
+        for k, rs in enumerate(batch):
+            if rs.rejected:
+                continue        # skipped row: draws no tie-break, like the
+                #                 sequential guard in _on_prefill_done
+            self._schedule_row(sel, k, rs, now)
+
+    def _phase3_cohort(self, live, now: float) -> None:
+        """Chunked-prefill cohort hook: ChunkPlane's phase-3 callback loop
+        with the same-instant selections fused.
+
+        Replicates ``ChunkPlane._iteration_done`` phase 3 per stream —
+        tokens_ready update, first-chunk scheduling (kv_streaming), chunk
+        streaming, prefill-done handling — with rows that need a decode
+        selection routed through one CohortSelector.  Rows whose sequential
+        predicate flips mid-walk (a callback cancelled or rejected the
+        stream) fall back exactly as the per-stream path would.
+        """
+        streaming = self.cfg.kv_streaming
+        jobs = []
+        for st in live:
+            if st.cancelled or st.rs.rejected:
+                continue
+            if streaming:
+                if not st.rs.stream_scheduled:
+                    jobs.append(st)
+            elif st.done >= st.rs.req.input_len:
+                jobs.append(st)
+        sel = None
+        row: dict[int, int] = {}
+        if len(jobs) > 1:
+            items = [
+                CohortItem(self._make_info(st.rs, streaming, st.done),
+                           st.rs.prefill_instance)
+                for st in jobs
+            ]
+            sel = self._cohort_selector(items, [st.rs.req for st in jobs], now)
+            row = {id(st): k for k, st in enumerate(jobs)}
+        for st in live:
+            if st.cancelled:
+                continue
+            rs = st.rs
+            if streaming:
+                # _on_chunk_done with the fused selection spliced in.
+                rs.tokens_ready = st.done
+                if not rs.rejected:
+                    if not rs.stream_scheduled:
+                        k = row.get(id(st))
+                        if sel is not None and k is not None:
+                            self._schedule_row(sel, k, rs, now, streaming=True)
+                        else:
+                            self._schedule_one(rs, now, streaming=True)
+                    if rs.stream_scheduled:
+                        self._stream_chunks(rs, now)
+            if st.done >= rs.req.input_len:
+                rs.prefill_end = now
+                k = row.get(id(st)) if not streaming else None
+                if sel is not None and k is not None and not rs.rejected \
+                        and not rs.stream_scheduled:
+                    self._schedule_row(sel, k, rs, now)
+                else:
+                    self._on_prefill_done(rs, now)
 
     def _flush_batch(self, now: float) -> None:
         window, self._batch_window = self._batch_window, []
@@ -448,7 +586,9 @@ class Simulation:
         t0 = _time.perf_counter()
         decisions = self.sched.select_batch(reqs, (self.view, hit_matrix), view,
                                             self.inflight)
-        self.decision_latencies.append((_time.perf_counter() - t0) / len(window))
+        dt = _time.perf_counter() - t0
+        self.decision_latencies.append(dt / len(window))
+        note_select(dt)
         # Arrival epoch: the whole dispatch burst lands at one timestamp, so
         # the FlowPlane admits it with a single union rate recompute.
         self.net.begin_epoch()
