@@ -9,7 +9,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.sim import SimConfig, run_sim  # noqa: E402
+from repro.sim import SimConfig, run_sim, trace_session  # noqa: E402
 from repro.sim.metrics import aggregate_seeds  # noqa: E402
 from repro.traces import generate_trace, profile_capacity  # noqa: E402
 
@@ -30,6 +30,12 @@ def run_point(scheduler: str, profile: str, *, rate_frac: float = 1.0,
               cfg_kw: dict | None = None, cap_kw: dict | None = None) -> dict:
     """One (scheduler, workload, rate) point aggregated over seeds."""
     cap = profile_capacity(profile, **(cap_kw or {}))
+    sess = trace_session()
+    if sess is not None:
+        # Label this point's runs in the combined trace artifacts
+        # (run.py --trace): "<profile>@<rate>" + the scheduler name the
+        # Simulation itself appends.
+        sess.context = f"{profile}@{rate_frac:g}"
     runs = []
     for seed in range(seeds):
         trace = generate_trace(profile, duration=duration,

@@ -25,7 +25,8 @@ def run(quick: bool = False) -> list[dict]:
             row["input_len"] = length
             rows.append(row)
             print(f"  exp2 len={length} {sched}: ttft={row['ttft_mean']*1e3:.0f}ms "
-                  f"slo={row['slo_attainment']:.3f}")
+                  f"slo={row['slo_attainment']:.3f} "
+                  f"xfer_share={row['xfer_share_mean']:.3f}")
     write_csv("exp2_context_sweep", rows)
     return rows
 
@@ -34,13 +35,19 @@ def main(quick: bool = False) -> None:
     t0 = time.time()
     rows = run(quick)
     deltas = []
+    shares = []
     for length in sorted({r["input_len"] for r in rows}):
         sub = [r for r in rows if r["input_len"] == length]
         rr = next(r for r in sub if r["scheduler"] == "rr")
         nk = next(r for r in sub if r["scheduler"] == "netkv-full")
         deltas.append((length, (1 - nk["ttft_mean"] / rr["ttft_mean"]) * 100))
+        # Proposition 1's mechanism, observed: the transfer share of TTFT
+        # grows with context length, and NetKV keeps it below the baseline.
+        shares.append((length, rr["xfer_share_mean"], nk["xfer_share_mean"]))
     trend = ";".join(f"{l}:{d:.1f}%" for l, d in deltas)
-    emit("exp2_context_sweep", (time.time() - t0) * 1e6 / max(len(rows), 1), trend)
+    share_trend = ";".join(f"{l}:rr={a:.2f}:nk={b:.2f}" for l, a, b in shares)
+    emit("exp2_context_sweep", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         trend + "|xfer_share:" + share_trend)
 
 
 if __name__ == "__main__":

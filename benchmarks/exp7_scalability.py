@@ -32,32 +32,54 @@ SCALES = [(64, 2, 2, 2), (128, 2, 4, 2), (256, 2, 8, 2), (512, 2, 16, 2),
 # SPEEDUP_FLOOR in net_throughput).
 EVENTS_FLOOR = 2.0
 
+# CI gate: turning TracePlane on (spans + per-decision forensics) may cost
+# at most this slowdown factor on the same 2048-GPU drive — tracing must
+# stay cheap enough to leave on during triage runs.
+TRACE_OVERHEAD_CAP = 1.10
 
-def _event_engine_gate(k: dict) -> list[dict]:
-    """Time the 2048-GPU netkv-full row under both event engines."""
+
+def _headline_point():
+    """The 2048-GPU gate row's shape + offered load."""
     gpus, pods, racks, servers = next(s for s in SCALES if s[0] == 2048)
     n_prefill = max(gpus // 64, 1) * 4
     n_decode = gpus // 4 - n_prefill
     cap = profile_capacity("rag", n_prefill=n_prefill, n_decode=n_decode,
                            tor_egress_bytes_per_s=8 * 50e9 / 8 * max(gpus // 64, 1))
-    from repro.sim import Simulation
+    return gpus, pods, racks, servers, n_prefill, cap
 
+
+def _event_engine_gate(k: dict) -> list[dict]:
+    """Time the 2048-GPU netkv-full row under both event engines.
+
+    The floor is a *traced-off* contract: an active ``--trace`` session is
+    paused around the timed arms so the gate keeps measuring the same
+    configuration CI has always gated on."""
+    gpus, pods, racks, servers, n_prefill, cap = _headline_point()
+    from repro.sim import Simulation, trace_session
+
+    sess = trace_session()
+    if sess is not None:
+        sess.paused = True
     rows = []
-    for engine in ("plane", "reference"):
-        trace = generate_trace("rag", duration=k["duration"], target_rps=cap,
-                               seed=0)
-        cfg = SimConfig(scheduler="netkv-full", seed=0, background=0.2,
-                        n_pods=pods, racks_per_pod=racks,
-                        servers_per_rack=servers, n_prefill=n_prefill,
-                        warmup=k["warmup"], measure=k["measure"],
-                        event_engine=engine)
-        sim = Simulation(cfg)
-        t0 = time.perf_counter()
-        sim.run(trace)
-        wall = time.perf_counter() - t0
-        rows.append(dict(axis="event_engine", gpus=gpus, engine=engine,
-                         events=int(sim.loop.processed), wall_s=wall,
-                         events_per_s=sim.loop.processed / max(wall, 1e-9)))
+    try:
+        for engine in ("plane", "reference"):
+            trace = generate_trace("rag", duration=k["duration"], target_rps=cap,
+                                   seed=0)
+            cfg = SimConfig(scheduler="netkv-full", seed=0, background=0.2,
+                            n_pods=pods, racks_per_pod=racks,
+                            servers_per_rack=servers, n_prefill=n_prefill,
+                            warmup=k["warmup"], measure=k["measure"],
+                            event_engine=engine)
+            sim = Simulation(cfg)
+            t0 = time.perf_counter()
+            sim.run(trace)
+            wall = time.perf_counter() - t0
+            rows.append(dict(axis="event_engine", gpus=gpus, engine=engine,
+                             events=int(sim.loop.processed), wall_s=wall,
+                             events_per_s=sim.loop.processed / max(wall, 1e-9)))
+    finally:
+        if sess is not None:
+            sess.paused = False
     ratio = rows[0]["events_per_s"] / max(rows[1]["events_per_s"], 1e-9)
     for r in rows:
         r["plane_vs_reference"] = ratio
@@ -66,6 +88,55 @@ def _event_engine_gate(k: dict) -> list[dict]:
     assert ratio >= EVENTS_FLOOR, (
         f"EventPlane throughput regressed: {ratio:.2f}x < {EVENTS_FLOOR}x "
         f"the reference engine on the 2048-GPU row")
+    return rows
+
+
+def _trace_overhead_gate(k: dict) -> list[dict]:
+    """Traced-on vs traced-off events/s on the 2048-GPU plane row.
+
+    Best-of-2 per arm (the gate bounds overhead, not noise); tracing is
+    controlled explicitly per ``SimConfig`` with any ``--trace`` session
+    paused, so the two arms differ only in TracePlane emission."""
+    gpus, pods, racks, servers, n_prefill, cap = _headline_point()
+    from repro.sim import Simulation, trace_session
+
+    sess = trace_session()
+    if sess is not None:
+        sess.paused = True
+    rows = []
+    best = {False: 0.0, True: 0.0}
+    try:
+        for traced in (False, True):
+            for rep in range(2):
+                trace = generate_trace("rag", duration=k["duration"],
+                                       target_rps=cap, seed=0)
+                cfg = SimConfig(scheduler="netkv-full", seed=0, background=0.2,
+                                n_pods=pods, racks_per_pod=racks,
+                                servers_per_rack=servers, n_prefill=n_prefill,
+                                warmup=k["warmup"], measure=k["measure"],
+                                trace=traced)
+                sim = Simulation(cfg)
+                t0 = time.perf_counter()
+                sim.run(trace)
+                wall = time.perf_counter() - t0
+                evs = sim.loop.processed / max(wall, 1e-9)
+                best[traced] = max(best[traced], evs)
+                rows.append(dict(axis="trace_overhead", gpus=gpus,
+                                 traced=traced, rep=rep, wall_s=wall,
+                                 events=int(sim.loop.processed),
+                                 events_per_s=evs,
+                                 spans=len(sim.trace.spans()) if sim.trace else 0))
+    finally:
+        if sess is not None:
+            sess.paused = False
+    overhead = best[False] / max(best[True], 1e-9)
+    for r in rows:
+        r["traced_overhead_x"] = overhead
+    print(f"  exp7 trace-overhead 2048gpus: off={best[False]:.0f}ev/s "
+          f"on={best[True]:.0f}ev/s ({(overhead - 1) * 100:.1f}% overhead)")
+    assert overhead <= TRACE_OVERHEAD_CAP, (
+        f"TracePlane overhead regressed: {overhead:.2f}x > "
+        f"{TRACE_OVERHEAD_CAP}x on the 2048-GPU row")
     return rows
 
 
@@ -126,6 +197,7 @@ def run(quick: bool = False) -> list[dict]:
                   f"{row['sim_s_per_wall_s']:.1f}x realtime")
     write_csv("exp7_scalability", rows)
     write_csv("exp7_event_engine", _event_engine_gate(k))
+    write_csv("exp7_trace_overhead", _trace_overhead_gate(k))
     # Per-decision scoring-path comparison at 1024-GPU-class pool sizes:
     # python loop vs vectorised NumPy vs Pallas kernel (interpret on CPU).
     from .sched_latency import micro_latency

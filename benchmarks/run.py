@@ -62,10 +62,18 @@ def main() -> None:
     ap.add_argument("--profile", action="store_true",
                     help="write per-lane/per-handler event dispatch times "
                          "to artifacts/bench/event_profile.csv")
+    ap.add_argument("--trace", action="store_true",
+                    help="record TracePlane spans + decision forensics in "
+                         "every simulation the selected harnesses run; "
+                         "writes artifacts/bench/trace.json (Perfetto) and "
+                         "artifacts/bench/ttft_breakdown.csv")
     args = ap.parse_args()
     if args.profile:
         from repro.sim.engine import enable_profiling
         enable_profiling(True)
+    if args.trace:
+        from repro.sim import enable_tracing
+        enable_tracing(True)
     names = list(HARNESSES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = 0
@@ -87,6 +95,15 @@ def main() -> None:
             path = write_csv("event_profile", rows)
             print(f"# event profile: {len(rows)} (lane, handler) rows -> {path}",
                   file=sys.stderr)
+    if args.trace:
+        from repro.sim import trace as _trace
+
+        from .common import OUT_DIR
+        sess = _trace._SESSION
+        if sess is not None and sess.n_runs:
+            for path in sess.write(OUT_DIR):
+                print(f"# trace: {sess.n_runs} runs -> {path}",
+                      file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -97,6 +97,11 @@ class Transfer:
     done: bool = False
     aborted: bool = False
     finish_time: float | None = None
+    # Link id the water-fill fixed this transfer's flows at (every flow of
+    # one transfer shares a path, so they fix in the same round at the same
+    # link).  Only populated when ``FlowPlane.record_bottlenecks`` is on;
+    # -1 for latency-only / aborted / untraced transfers.
+    bottleneck_link: int = -1
 
 
 @dataclasses.dataclass
@@ -137,6 +142,7 @@ class FlowPlane:
         self.f_rate = np.zeros(cap, np.float64)
         self.f_tier = np.zeros(cap, np.int64)
         self.f_transfer = np.full(cap, -1, np.int64)      # transfer id
+        self.f_bneck = np.full(cap, -1, np.int64)         # last bottleneck link
         # Path rows are padded with the virtual link id ``n_links`` (capacity
         # +inf, never a bottleneck), so every array op can ignore ragged
         # path lengths without masking.  int16 link ids (topologies under
@@ -168,6 +174,10 @@ class FlowPlane:
         # sequence — the oracle trace the jitted solver
         # (``kernels.waterfill``) must reproduce exactly.
         self._wf_trace: list[tuple[int, float]] | None = None
+        # TracePlane instrumentation: when on, each water-fill round also
+        # stamps the fixing link id into ``f_bneck`` so a completing
+        # Transfer can report the bottleneck that set its final rate.
+        self.record_bottlenecks = False
 
     # ------------------------------------------------------------- internals
     def _sample_background(self, now: float) -> None:
@@ -183,7 +193,8 @@ class FlowPlane:
     def _grow(self) -> None:
         cap = len(self.f_id)
         new_cap = cap * 2
-        for name in ("f_id", "f_bytes", "f_rate", "f_tier", "f_transfer"):
+        for name in ("f_id", "f_bytes", "f_rate", "f_tier", "f_transfer",
+                     "f_bneck"):
             old = getattr(self, name)
             new = np.zeros(new_cap, old.dtype)
             new[:cap] = old
@@ -257,6 +268,7 @@ class FlowPlane:
             self.f_rate[s] = 0.0
             self.f_tier[s] = tier
             self.f_transfer[s] = t.transfer_id
+            self.f_bneck[s] = -1
             self.f_path[s] = row
             self._slot_order[s] = None
             slots.append(s)
@@ -347,6 +359,8 @@ class FlowPlane:
         done_transfers: list[Transfer] = []
         for s in finished:           # creation order, matching the reference
             tid = int(self.f_transfer[s])
+            if self.record_bottlenecks:
+                self._transfers[tid].bottleneck_link = int(self.f_bneck[s])
             self._remove_slot(s)
             t = self._transfers[tid]
             t.flows_open -= 1
@@ -495,6 +509,8 @@ class FlowPlane:
             rows = csr_rows[csr_start[lid]:csr_start[lid + 1]]
             fixed_rows = rows[unfixed[rows]]         # flow-creation order
             rates[fixed_rows] = share
+            if self.record_bottlenecks:
+                self.f_bneck[slots[fixed_rows]] = perm[lid]
             idx = P[fixed_rows].ravel()              # reference subtraction order
             np.subtract.at(caps, idx, share)
             np.maximum(caps, 0.0, out=caps)

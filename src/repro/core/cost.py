@@ -239,6 +239,29 @@ def post_prefill_latency(
     )
 
 
+def decision_breakdown(
+    *,
+    s_eff: float,
+    tier_bw: float,
+    congestion: float,
+    n_inflight: int,
+    tier_latency: float,
+    q_d: int,
+    beta_d: int,
+    beta_max: int,
+    iter_model: IterTimeModel,
+) -> tuple[float, float, float]:
+    """Eq. (5) split into its Eq. (3)/(6)/(7) terms: (T_xfer, T_queue,
+    T_decode) for one candidate — the schema of a TracePlane forensics
+    row's transfer/load components.  Pure, so tests can recompute a
+    recorded winner's breakdown and assert bit-equality."""
+    return (
+        transfer_time(s_eff, tier_bw, congestion, n_inflight, tier_latency),
+        queue_time(q_d, beta_d, beta_max, iter_model),
+        first_decode_time(beta_d, iter_model),
+    )
+
+
 def feasible(m_d: float, s_eff: float, m_min: float) -> bool:
     """Feasibility: D_r = {d : m_d >= s_eff(d) + m_min}."""
     return m_d >= s_eff + m_min

@@ -61,6 +61,7 @@ from .schedulers import (
     RequestInfo,
     RoundRobin,
     Scheduler,
+    _runner_up,
 )
 from .view import ClusterView
 
@@ -367,23 +368,47 @@ class CohortSelector:
         if idx.size == 0:
             return None
         kind = self._kind
+        h = sched.trace_hook
         if kind == "rr":
-            j = int(idx[np.argsort(cv.ids[idx])[sched._next % idx.size]])
+            ord_ids = np.argsort(cv.ids[idx])
+            pos = sched._next % idx.size
+            j = int(idx[ord_ids[pos]])
             sched._next += 1
             iid = int(cv.ids[j])
+            if h is not None and h.want_decision():
+                j2 = int(idx[ord_ids[(pos + 1) % idx.size]]) \
+                    if idx.size > 1 else -1
+                sched._note_decision("rr", req, pid, cv, oracle,
+                                     sched._oracle_tier_fn(cv, oracle, pid),
+                                     j, j2, cache=self.H[k])
             self._watch_slot(iid)
             return Decision(iid, 0.0, 0.0, oracle.tier_of(pid, iid),
                             float(se[j]))
         if kind == "la":
-            j = _pick_min(idx, self._load, sched._ties(idx.size))
+            ties = sched._ties(idx.size)
+            j = _pick_min(idx, self._load, ties)
             iid = int(cv.ids[j])
+            if h is not None and h.want_decision():
+                sched._note_decision(
+                    "la", req, pid, cv, oracle,
+                    sched._oracle_tier_fn(cv, oracle, pid),
+                    j, _runner_up(idx, ties, (self._load[idx],)),
+                    cost=self._load, cache=self.H[k], load=self._load)
             self._watch_slot(iid)
             return Decision(iid, float(self._load[j]), 0.0,
                             oracle.tier_of(pid, iid), float(se[j]))
         if kind == "ca":
             neg_hit = -self.H[k]
-            j = _pick_min2(idx, neg_hit, self._load, sched._ties(idx.size))
+            ties = sched._ties(idx.size)
+            j = _pick_min2(idx, neg_hit, self._load, ties)
             iid = int(cv.ids[j])
+            if h is not None and h.want_decision():
+                sched._note_decision(
+                    "ca", req, pid, cv, oracle,
+                    sched._oracle_tier_fn(cv, oracle, pid),
+                    j, _runner_up(idx, ties,
+                                  (self._load[idx], neg_hit[idx])),
+                    cost=neg_hit, cache=self.H[k], load=self._load)
             self._watch_slot(iid)
             return Decision(iid, float(neg_hit[j]), 0.0,
                             oracle.tier_of(pid, iid), float(se[j]))
@@ -391,8 +416,15 @@ class CohortSelector:
             miss = 1.0 - np.minimum(self.H[k], req.input_len) \
                 / max(req.input_len, 1)
             score = sched.w_cache * miss + sched.w_load * self._loadn
-            j = _pick_min(idx, score, sched._ties(idx.size))
+            ties = sched._ties(idx.size)
+            j = _pick_min(idx, score, ties)
             iid = int(cv.ids[j])
+            if h is not None and h.want_decision():
+                sched._note_decision(
+                    "cla", req, pid, cv, oracle,
+                    sched._oracle_tier_fn(cv, oracle, pid),
+                    j, _runner_up(idx, ties, (score[idx],)),
+                    cost=score, cache=self.H[k], load=self._loadn)
             self._watch_slot(iid)
             return Decision(iid, float(score[j]), 0.0,
                             oracle.tier_of(pid, iid), float(se[j]))
@@ -410,11 +442,18 @@ class CohortSelector:
             # the cohort-invariant Eq. (6)/(7) vectors reused.
             t_x = sched._xfer_vec(req, cv, pid, oracle, infl, se, tier_row)
         cost = (t_x + self._t_q) + self._t_d
-        j = _pick_min(idx, cost, sched._ties(idx.size))
+        ties = sched._ties(idx.size)
+        j = _pick_min(idx, cost, ties)
         best_tier = int(tier_row[j])
         if infl is not None:
             infl.incr(pid, best_tier)
             self._infl_dirty.add(pid)
+        if h is not None and h.want_decision():
+            sched._note_decision(sched.name, req, pid, cv, oracle,
+                                 lambda jj: int(tier_row[jj]),
+                                 j, _runner_up(idx, ties, (cost[idx],)),
+                                 cost=cost, cache=self.H[k],
+                                 load=self._t_q + self._t_d, xfer=t_x)
         iid = int(cv.ids[j])
         self._watch_slot(iid)
         return Decision(iid, float(cost[j]), float(t_x[j]), best_tier,
@@ -462,6 +501,13 @@ class CohortSelector:
                                 nfl[tier], oracle.tier_latency[tier])
             if infl is not None:
                 infl.incr(pid, tier)
+            h = sched.trace_hook
+            if h is not None and h.want_decision():
+                # Same row the single-row kernel path records (the cohort
+                # kernel's f32 cost row is bit-identical across shapes).
+                sched._note_pallas(req, pid, cv, oracle, tier_row, se,
+                                   self.H[k], self._pl_costs[i], cong, nfl,
+                                   j, t_x)
             d = Decision(int(cv.ids[j]), best_cost, t_x, tier, se_j)
         if d is not None:
             if infl is not None:

@@ -93,6 +93,20 @@ class Decision:
     s_eff: float                # effective bytes to move
 
 
+def _runner_up(idx: np.ndarray, ties: np.ndarray, keys: tuple) -> int:
+    """Full-space index of the *second* candidate under the ladder's
+    ``(keys..., ties)`` stable lexsort order, or -1 with a lone candidate.
+
+    ``keys`` are idx-space arrays in ``np.lexsort`` order (primary last).
+    Computed only on sampled forensics decisions; both dispatch modes pass
+    the same key vectors and tie draws, so the runner-up is bit-identical
+    whether the winner came from ``select()`` or ``CohortSelector``."""
+    if idx.size < 2:
+        return -1
+    order = np.lexsort((ties,) + keys)
+    return int(idx[order[1]])
+
+
 # --------------------------------------------------------------------------
 # Vectorised cost components: Eq. (2)-(7) as array ops over view columns.
 # Operation order matches the scalar helpers in cost.py exactly so results
@@ -168,9 +182,42 @@ class Scheduler:
         # policies, since ids order pods).  One draw per feasible candidate,
         # in candidate order — the same RNG stream the reference loop reads.
         self._rng = np.random.default_rng(seed + 0xC0FFEE)
+        # TracePlane decision-forensics hook (``sim/trace.py``); None keeps
+        # every select path allocation-free.  Both dispatch modes call
+        # ``want_decision()`` once per decision so sampling stays aligned.
+        self.trace_hook = None
 
     def _ties(self, k: int) -> np.ndarray:
         return self._rng.random(k)
+
+    def _note_decision(self, kind, req, prefill_id, cv, oracle, tier_fn,
+                       j, j2, *, cost=None, cache=None, load=None, xfer=None):
+        """Record one sampled forensics row: winner ``j`` vs runner-up
+        ``j2`` (full-space indices, -1 = none), components as full-space
+        vectors.  Scalar extraction is synchronous, so reused view scratch
+        buffers are safe to pass; congestion is read from the *raw* oracle
+        snapshot — never ``_congestion_by_tier``, whose predictive
+        override advances an EWMA per call."""
+        def pair(vec):
+            if vec is None:
+                return 0.0, 0.0
+            return float(vec[j]), (float(vec[j2]) if j2 >= 0 else float("nan"))
+
+        cost_w, cost_r = pair(cost)
+        cache_w, cache_r = pair(cache)
+        load_w, load_r = pair(load)
+        xfer_w, xfer_r = pair(xfer)
+        tier_w = tier_fn(j)
+        tier_r = tier_fn(j2) if j2 >= 0 else -1
+        self.trace_hook.decision(
+            kind, req.request_id, prefill_id,
+            int(cv.ids[j]), int(cv.ids[j2]) if j2 >= 0 else -1,
+            tier_w, tier_r, float(oracle.congestion.get(tier_w, 0.0)),
+            cost_w, cost_r, cache_w, cache_r, load_w, load_r,
+            xfer_w, xfer_r)
+
+    def _oracle_tier_fn(self, cv, oracle, prefill_id):
+        return lambda jj: oracle.tier_of(prefill_id, int(cv.ids[jj]))
 
     # -- shared vector components -------------------------------------------
     def _prep(self, req: RequestInfo, cv: ClusterView):
@@ -259,10 +306,19 @@ class RoundRobin(Scheduler):
         idx = np.flatnonzero(mask)
         if idx.size == 0:
             return None
-        j = int(idx[np.argsort(cv.ids[idx])[self._next % idx.size]])
+        ord_ids = np.argsort(cv.ids[idx])
+        pos = self._next % idx.size
+        j = int(idx[ord_ids[pos]])
         self._next += 1
         iid = int(cv.ids[j])
         tier = oracle.tier_of(prefill_id, iid)
+        h = self.trace_hook
+        if h is not None and h.want_decision():
+            # rr's "runner-up" is the next cursor position.
+            j2 = int(idx[ord_ids[(pos + 1) % idx.size]]) if idx.size > 1 else -1
+            self._note_decision("rr", req, prefill_id, cv, oracle,
+                                self._oracle_tier_fn(cv, oracle, prefill_id),
+                                j, j2, cache=cv.column("hit_tokens"))
         return Decision(iid, 0.0, 0.0, tier, float(s_eff[j]))
 
 
@@ -278,9 +334,17 @@ class LoadAware(Scheduler):
         if idx.size == 0:
             return None
         load = self._t_queue_vec(cv) + self._t_decode_vec(cv)
-        j = int(idx[np.lexsort((self._ties(idx.size), load[idx]))[0]])
+        ties = self._ties(idx.size)
+        j = int(idx[np.lexsort((ties, load[idx]))[0]])
         iid = int(cv.ids[j])
         tier = oracle.tier_of(prefill_id, iid)
+        h = self.trace_hook
+        if h is not None and h.want_decision():
+            self._note_decision("la", req, prefill_id, cv, oracle,
+                                self._oracle_tier_fn(cv, oracle, prefill_id),
+                                j, _runner_up(idx, ties, (load[idx],)),
+                                cost=load, cache=cv.column("hit_tokens"),
+                                load=load)
         return Decision(iid, float(load[j]), 0.0, tier, float(s_eff[j]))
 
 
@@ -297,9 +361,18 @@ class CacheAware(Scheduler):
             return None
         neg_hit = -cv.column("hit_tokens")
         load = self._t_queue_vec(cv) + self._t_decode_vec(cv)
-        j = int(idx[np.lexsort((self._ties(idx.size), load[idx], neg_hit[idx]))[0]])
+        ties = self._ties(idx.size)
+        j = int(idx[np.lexsort((ties, load[idx], neg_hit[idx]))[0]])
         iid = int(cv.ids[j])
         tier = oracle.tier_of(prefill_id, iid)
+        h = self.trace_hook
+        if h is not None and h.want_decision():
+            self._note_decision("ca", req, prefill_id, cv, oracle,
+                                self._oracle_tier_fn(cv, oracle, prefill_id),
+                                j, _runner_up(idx, ties,
+                                              (load[idx], neg_hit[idx])),
+                                cost=neg_hit, cache=cv.column("hit_tokens"),
+                                load=load)
         return Decision(iid, float(neg_hit[j]), 0.0, tier, float(s_eff[j]))
 
 
@@ -329,9 +402,20 @@ class CacheLoadAware(Scheduler):
         if idx.size == 0:
             return None
         score = self._score_vec(req, cv)
-        j = int(idx[np.lexsort((self._ties(idx.size), score[idx]))[0]])
+        ties = self._ties(idx.size)
+        j = int(idx[np.lexsort((ties, score[idx]))[0]])
         iid = int(cv.ids[j])
         tier = oracle.tier_of(prefill_id, iid)
+        h = self.trace_hook
+        if h is not None and h.want_decision():
+            # Same normalised-load expression the cohort selector caches.
+            loadn = (self._t_queue_vec(cv) + self._t_decode_vec(cv)) \
+                / self.iter_model(self.beta_max)
+            self._note_decision("cla", req, prefill_id, cv, oracle,
+                                self._oracle_tier_fn(cv, oracle, prefill_id),
+                                j, _runner_up(idx, ties, (score[idx],)),
+                                cost=score, cache=cv.column("hit_tokens"),
+                                load=loadn)
         return Decision(iid, float(score[j]), 0.0, tier, float(s_eff[j]))
 
 
@@ -374,11 +458,21 @@ class NetKVFull(Scheduler):
             return self._select_pallas(
                 req, prefill_id, cv, oracle, inflight, s_eff, tier_row)
         t_x = self._xfer_vec(req, cv, prefill_id, oracle, inflight, s_eff, tier_row)
-        cost = t_x + self._t_queue_vec(cv) + self._t_decode_vec(cv)
-        j = int(idx[np.lexsort((self._ties(idx.size), cost[idx]))[0]])
+        t_q = self._t_queue_vec(cv)
+        t_d = self._t_decode_vec(cv)
+        cost = t_x + t_q + t_d
+        ties = self._ties(idx.size)
+        j = int(idx[np.lexsort((ties, cost[idx]))[0]])
         best_tier = int(tier_row[j])
         if inflight is not None:
             inflight.incr(prefill_id, best_tier)  # line 14; decremented on done
+        h = self.trace_hook
+        if h is not None and h.want_decision():
+            self._note_decision(self.name, req, prefill_id, cv, oracle,
+                                lambda jj: int(tier_row[jj]),
+                                j, _runner_up(idx, ties, (cost[idx],)),
+                                cost=cost, cache=cv.column("hit_tokens"),
+                                load=t_q + t_d, xfer=t_x)
         return Decision(int(cv.ids[j]), float(cost[j]), float(t_x[j]),
                         best_tier, float(s_eff[j]))
 
@@ -415,7 +509,47 @@ class NetKVFull(Scheduler):
                             nfl[tier], oracle.tier_latency[tier])
         if inflight is not None:
             inflight.incr(prefill_id, tier)
+        h = self.trace_hook
+        if h is not None and h.want_decision():
+            self._note_pallas(req, prefill_id, cv, oracle, tier_row, s_eff,
+                              cv.column("hit_tokens"), costs, cong, nfl, j,
+                              t_x)
         return Decision(int(cv.ids[j]), best_cost, t_x, tier, se)
+
+    def _note_pallas(self, req, prefill_id, cv, oracle, tier_row, s_eff,
+                     hit, costs, cong, nfl, j, t_x_w):
+        """Forensics row for a kernel-scored decision (numpy-free runner-up:
+        the kernel's lowest-index tie-break is a masked argmin over its f32
+        cost row).  Shared with the cohort selector's cached-row path so
+        both dispatch modes record identical rows."""
+        from repro.kernels.netkv_score import BIG
+
+        c = np.asarray(costs)
+        j2 = -1
+        if c.size > 1:
+            masked = c.copy()
+            masked[j] = np.inf
+            jj = int(np.argmin(masked))
+            if float(masked[jj]) < BIG / 2:
+                j2 = jj
+        xfer_r = float("nan")
+        if j2 >= 0:
+            tier_r = int(tier_row[j2])
+            xfer_r = transfer_time(
+                float(s_eff[j2]), oracle.tier_bandwidth[tier_r], cong[tier_r],
+                nfl[tier_r], oracle.tier_latency[tier_r])
+        # The kernel does not materialise T_queue/T_decode separately;
+        # record load as the cost with the (f64-recomputed) T_xfer removed.
+        xvec = np.full(c.shape, np.nan)
+        xvec[j] = t_x_w
+        lvec = np.full(c.shape, np.nan)
+        lvec[j] = float(c[j]) - t_x_w
+        if j2 >= 0:
+            xvec[j2] = xfer_r
+            lvec[j2] = float(c[j2]) - xfer_r
+        self._note_decision(self.name, req, prefill_id, cv, oracle,
+                            lambda jj_: int(tier_row[jj_]), j, j2,
+                            cost=c, cache=hit, load=lvec, xfer=xvec)
 
 
 class NetKVStatic(NetKVFull):

@@ -15,6 +15,10 @@ from .reference import (
 from .metrics import RunMetrics, aggregate_seeds, summarize
 from .scenarios import ScenarioPlane, ScenarioSpec, cohort_step, cohort_step_jit
 from .simulator import FaultEvent, RewireEvent, SimConfig, Simulation, run_sim
+from .trace import (
+    TracePlane, TraceSession, enable_tracing, trace_session,
+    ttft_attribution, ttft_breakdown_rows,
+)
 
 __all__ = [
     "EventLoop", "EventPlane", "make_event_loop",
@@ -26,4 +30,6 @@ __all__ = [
     "RequestState", "RunMetrics", "aggregate_seeds", "summarize",
     "ScenarioPlane", "ScenarioSpec", "cohort_step", "cohort_step_jit",
     "FaultEvent", "RewireEvent", "SimConfig", "Simulation", "run_sim",
+    "TracePlane", "TraceSession", "enable_tracing", "trace_session",
+    "ttft_attribution", "ttft_breakdown_rows",
 ]

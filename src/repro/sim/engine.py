@@ -62,50 +62,86 @@ _SLOT_LANES = (LANE_NET, LANE_TICK, LANE_CLOCK)
 _INF = float("inf")
 
 # ------------------------------------------------------------- profiling
-# Per-lane / per-handler cumulative dispatch time, shared by every loop in
-# the process while enabled (``benchmarks/run.py --profile``).  Key:
-# (lane name, handler qualname) -> [count, seconds].
-_PROFILE: dict | None = None
-
-# Scheduler-select accumulator: the simulator reports each select's wall
-# time via note_select(); the run loops debit it from the owning handler's
-# row and credit a dedicated ("select", ...) row, so event_profile.csv
-# separates decision time from the event plumbing that hosts it.
-_SELECT_ACC = [0.0, 0]          # [seconds, count] since profiling enabled
 
 
-def enable_profiling(on: bool = True) -> None:
-    global _PROFILE
-    _PROFILE = {} if on else None
-    _SELECT_ACC[0] = 0.0
-    _SELECT_ACC[1] = 0
+class ProfileSession:
+    """Per-lane / per-handler cumulative dispatch time for one profiled run.
 
+    Each event loop binds the session active at its construction, so
+    back-to-back benchmark arms in one process each debit their own
+    session — ``select``-lane credit cannot leak across runs the way the
+    old module-global accumulator allowed.  ``rows``: (lane name,
+    handler qualname) -> [count, seconds]; the select accumulator lets
+    run loops debit scheduler-select time from the owning handler's row
+    and credit a dedicated ("select", ...) row instead."""
 
-def note_select(seconds: float, name: str = "scheduler.select") -> None:
-    """Report one scheduler-select's wall time (no-op unless profiling)."""
-    if _PROFILE is not None:
-        _SELECT_ACC[0] += seconds
-        _SELECT_ACC[1] += 1
+    __slots__ = ("rows", "select_s", "select_n")
+
+    def __init__(self) -> None:
+        self.rows: dict[tuple[str, str], list] = {}
+        self.select_s = 0.0
+        self.select_n = 0
+
+    def note_select(self, seconds: float, name: str = "scheduler.select") -> None:
+        self.select_s += seconds
+        self.select_n += 1
         key = ("select", name)
-        ent = _PROFILE.get(key)
+        ent = self.rows.get(key)
         if ent is None:
-            _PROFILE[key] = [1, seconds]
+            self.rows[key] = [1, seconds]
         else:
             ent[0] += 1
             ent[1] += seconds
 
+    def add(self, lane: str, handler: str, dt: float) -> None:
+        key = (lane, handler)
+        ent = self.rows.get(key)
+        if ent is None:
+            self.rows[key] = [1, dt]
+        else:
+            ent[0] += 1
+            ent[1] += dt
+
+    def profile_rows(self) -> list[dict]:
+        rows = [
+            dict(lane=lane, handler=handler, events=cnt, seconds=sec,
+                 us_per_event=sec / cnt * 1e6 if cnt else 0.0)
+            for (lane, handler), (cnt, sec) in self.rows.items()
+        ]
+        rows.sort(key=lambda r: -r["seconds"])
+        return rows
+
+
+# The session new loops bind (``benchmarks/run.py --profile`` enables one
+# for the whole process; tests create scoped ones per run).
+_CURRENT: ProfileSession | None = None
+
+
+def enable_profiling(on: bool = True) -> ProfileSession | None:
+    """Start a fresh process-wide ProfileSession (or stop profiling).
+
+    Returns the new session; loops constructed while it is current bind
+    it for their lifetime, so re-enabling mid-process starts clean totals
+    without retroactively crediting already-running loops."""
+    global _CURRENT
+    _CURRENT = ProfileSession() if on else None
+    return _CURRENT
+
+
+def note_select(seconds: float, name: str = "scheduler.select") -> None:
+    """Report one scheduler-select's wall time to the current session.
+
+    Compat shim — the simulator reports through its own loop's
+    ``note_select`` so credit lands in the session that loop debits."""
+    if _CURRENT is not None:
+        _CURRENT.note_select(seconds, name)
+
 
 def profile_rows() -> list[dict]:
-    """Accumulated dispatch profile as CSV-ready rows (slowest first)."""
-    if not _PROFILE:
+    """Current session's dispatch profile as CSV-ready rows (slowest first)."""
+    if _CURRENT is None:
         return []
-    rows = [
-        dict(lane=lane, handler=handler, events=cnt, seconds=sec,
-             us_per_event=sec / cnt * 1e6 if cnt else 0.0)
-        for (lane, handler), (cnt, sec) in _PROFILE.items()
-    ]
-    rows.sort(key=lambda r: -r["seconds"])
-    return rows
+    return _CURRENT.profile_rows()
 
 
 def _handler_name(fn) -> str:
@@ -150,6 +186,7 @@ class EventLoop:
         self.now = 0.0
         self.processed = 0
         self._live = 0  # pending non-cancelled events (O(1) empty())
+        self.profile = _CURRENT  # ProfileSession bound for this loop's life
         # Single-slot lanes: lane -> (requested_time, Event).  The event is
         # consumed in-place by run() (cancelled=True), so arm() after a
         # fire re-arms without a cancel — the behaviour the old per-site
@@ -259,9 +296,14 @@ class EventLoop:
             self.trace_log.extend((t, lane) for t in times)
 
     # ------------------------------------------------------------------ run
+    def note_select(self, seconds: float, name: str = "scheduler.select") -> None:
+        """Report one scheduler-select's wall time to this loop's session."""
+        if self.profile is not None:
+            self.profile.note_select(seconds, name)
+
     def run(self, until: float = float("inf"), max_events: int = 50_000_000) -> None:
         log = self.trace_log
-        prof = _PROFILE
+        prof = self.profile
         while self._heap and self.processed < max_events:
             ev = heapq.heappop(self._heap)
             if ev.cancelled:
@@ -283,19 +325,13 @@ class EventLoop:
                 ev.fn(self.now)
             else:
                 t0 = _time.perf_counter()
-                s0 = _SELECT_ACC[0]
+                s0 = prof.select_s
                 ev.fn(self.now)
                 # Debit scheduler-select time reported via note_select():
                 # it is credited to the dedicated ("select", ...) row, so
                 # the owning handler's row shows event plumbing only.
-                dt = _time.perf_counter() - t0 - (_SELECT_ACC[0] - s0)
-                key = (LANE_NAMES[ev.lane], _handler_name(ev.fn))
-                ent = prof.get(key)
-                if ent is None:
-                    prof[key] = [1, dt]
-                else:
-                    ent[0] += 1
-                    ent[1] += dt
+                dt = _time.perf_counter() - t0 - (prof.select_s - s0)
+                prof.add(LANE_NAMES[ev.lane], _handler_name(ev.fn), dt)
         if self._heap and self.processed >= max_events:
             raise RuntimeError("event budget exhausted — runaway simulation?")
 
@@ -353,6 +389,7 @@ class EventPlane:
         self.processed = 0
         self._live = 0
         self._until = _INF
+        self.profile = _CURRENT  # ProfileSession bound for this loop's life
         # generic lane: Event heap + live-in-heap counter for compaction
         self._gen: list[Event] = []
         self._gen_live = 0
@@ -562,6 +599,11 @@ class EventPlane:
                 last = entry[0]
         buf.clear()
 
+    def note_select(self, seconds: float, name: str = "scheduler.select") -> None:
+        """Report one scheduler-select's wall time to this loop's session."""
+        if self.profile is not None:
+            self.profile.note_select(seconds, name)
+
     # ------------------------------------------------------------------ run
     def run(self, until: float = float("inf"), max_events: int = 50_000_000) -> None:
         self._until = until
@@ -571,7 +613,7 @@ class EventPlane:
         slots = self._slot
         ms = self._mslot
         log_on = self.trace_log is not None
-        prof = _PROFILE
+        prof = self.profile
         while self.processed < max_events:
             while gen and gen[0].cancelled:
                 heapq.heappop(gen)
@@ -619,7 +661,7 @@ class EventPlane:
                 self.trace_log.append((best_t, lane))
             if prof is not None:
                 t0 = _time.perf_counter()
-                s0 = _SELECT_ACC[0]
+                s0 = prof.select_s
             if lane == LANE_GENERIC:
                 ev = heapq.heappop(gen)
                 ev.cancelled = True         # consumed: late cancel is a no-op
@@ -642,14 +684,8 @@ class EventPlane:
                 fn(m[2], best_t)
             if prof is not None:
                 # Same select-time debit as the reference loop (see above).
-                dt = _time.perf_counter() - t0 - (_SELECT_ACC[0] - s0)
-                key = (LANE_NAMES[lane], _handler_name(fn))
-                ent = prof.get(key)
-                if ent is None:
-                    prof[key] = [1, dt]
-                else:
-                    ent[0] += 1
-                    ent[1] += dt
+                dt = _time.perf_counter() - t0 - (prof.select_s - s0)
+                prof.add(LANE_NAMES[lane], _handler_name(fn), dt)
             if self._batch_buf:
                 self._flush_batch_log()
         if self.processed >= max_events and self._pending():

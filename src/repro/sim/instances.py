@@ -264,6 +264,9 @@ class ChunkPlane:
         self.streams: list[list[_ChunkStream]] = [[] for _ in range(n_pre)]
         self.inflight: list[Optional[list]] = [None] * n_pre
         self.iterations = 0      # telemetry: chunked prefill iterations
+        # Iteration start times, kept only while tracing (chunk spans need
+        # the [start, end) interval of the iteration that served them).
+        self.iter_base = np.zeros(n_pre, np.float64)
 
     # ------------------------------------------------------------- routing
     def eta_row(self, now: float, n: int) -> np.ndarray:
@@ -338,6 +341,8 @@ class ChunkPlane:
         self.backlog[s] -= total
         self.pending[s] -= nfirst
         self.busy[s] = base + (self.model.c * total + self.model.d * nfirst)
+        if self.owner.trace is not None:
+            self.iter_base[s] = base
         self.inflight[s] = served
         self.owner.loop.arm_slot(LANE_PREFILL, s, float(self.busy[s]),
                                  self._iteration_done)
@@ -356,11 +361,16 @@ class ChunkPlane:
         rotated: list[_ChunkStream] = []
         live: list[_ChunkStream] = []
         n_live = 0               # served entries still present in `streams`
+        tr = owner.trace
+        iid = int(owner.p_ids[s])
+        base = float(self.iter_base[s])
         for st, take in served:
             if st.cancelled:
                 continue
             n_live += 1
             st.done += take
+            if tr is not None:
+                tr.chunk(st.rs, iid, base, now, take, st.done)
             live.append(st)
             if st.done < st.rs.req.input_len:
                 rotated.append(st)
@@ -409,6 +419,9 @@ class InstancePlane:
         self.chunk_tokens = chunk_tokens
         self.on_prefill_done: Callable[[RequestState, float], None] | None = None
         self.on_chunk_done: Callable[[RequestState, int, float], None] | None = None
+        # TracePlane sink (sim/trace.py), set by the Simulation when
+        # tracing; None keeps every emission site a dead branch.
+        self.trace = None
         # Cohort dispatch hooks (SimConfig.dispatch_mode="plane"): when set,
         # same-timestamp prefill completions are handed over as one batch so
         # the simulator can run a single fused R x D selection instead of R

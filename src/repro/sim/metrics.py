@@ -6,6 +6,8 @@ import dataclasses
 
 import numpy as np
 
+from .trace import ttft_attribution
+
 
 @dataclasses.dataclass
 class RunMetrics:
@@ -29,6 +31,17 @@ class RunMetrics:
     decision_latency_p99: float
     requeues: int = 0
     decode_iterations: int = 0  # continuous-batching steps across instances
+    # TTFT attribution (sim/trace.py::ttft_attribution): per-phase shares
+    # of time-to-first-token over the measurement window.  NaN on
+    # degenerate windows, like every distributional metric above.
+    queue_wait_mean: float = float("nan")
+    queue_wait_p95: float = float("nan")
+    prefill_mean: float = float("nan")
+    prefill_p95: float = float("nan")
+    admit_wait_mean: float = float("nan")
+    admit_wait_p95: float = float("nan")
+    xfer_share_mean: float = float("nan")
+    xfer_share_p95: float = float("nan")
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
@@ -103,13 +116,14 @@ def summarize(records, *, window: tuple[float, float], scheduler: str,
         decision_latency_p99=_pct(dl, 99),
         requeues=sum(r.requeues for r in meas),
         decode_iterations=decode_iterations,
+        **ttft_attribution(records, window),
     )
 
 
 def aggregate_seeds(runs: list[RunMetrics]) -> dict:
     """mean ± std across seeds for the headline metrics."""
     keys = ["ttft_mean", "ttft_p99", "tbt_mean", "slo_attainment", "xfer_mean",
-            "goodput_rps"]
+            "goodput_rps", "xfer_share_mean"]
     out = {"scheduler": runs[0].scheduler, "n_seeds": len(runs)}
     for k in keys:
         vals = np.array([getattr(r, k) for r in runs], dtype=np.float64)

@@ -184,6 +184,8 @@ class ChunkedPrefillSim:
         self.on_chunk: Callable | None = None
         self.healthy = True
         self.iterations = 0
+        self.trace = None        # TracePlane sink; mirrors ChunkPlane
+        self._iter_base = 0.0    # running iteration's start, kept while tracing
 
     @property
     def queued(self) -> int:
@@ -241,6 +243,8 @@ class ChunkedPrefillSim:
         self.backlog -= total
         self.pending -= nfirst
         self.busy_until = base + (self.model.c * total + self.model.d * nfirst)
+        if self.trace is not None:
+            self._iter_base = base
         self.inflight = served
         self.loop.at(self.busy_until, self._iteration_done, lane=LANE_PREFILL)
 
@@ -254,11 +258,15 @@ class ChunkedPrefillSim:
         rotated = []
         live = []
         n_live = 0
+        tr = self.trace
+        base = self._iter_base
         for st, take in served:
             if st[2]:
                 continue
             n_live += 1
             st[1] += take
+            if tr is not None:
+                tr.chunk(st[0], self.instance_id, base, now, take, st[1])
             live.append(st)
             if st[1] < st[0].req.input_len:
                 rotated.append(st)
@@ -492,8 +500,22 @@ class ReferenceInstanceEngine:
             for m in dec_meta
         ]
         self._by_id = {d.instance_id: d for d in self.decode}
+        self._trace = None
 
     # ------------------------------------------------------------- callbacks
+    @property
+    def trace(self):
+        return self._trace
+
+    @trace.setter
+    def trace(self, tr) -> None:
+        """TracePlane sink — fanned out to the chunked prefill sims, which
+        emit per-chunk spans (mirrors ``InstancePlane.trace`` wiring)."""
+        self._trace = tr
+        if self.chunk_tokens is not None:
+            for p in self.prefill:
+                p.trace = tr
+
     @property
     def on_prefill_done(self):
         return self.prefill[0].on_done if self.prefill else None

@@ -58,11 +58,11 @@ from .engine import (
     LANE_REWIRE,
     LANE_TICK,
     make_event_loop,
-    note_select,
 )
 from .instances import InstancePlane, RequestState
 from .metrics import RunMetrics, summarize
 from .reference import ReferenceInstanceEngine
+from .trace import TracePlane, trace_session
 
 
 @dataclasses.dataclass
@@ -162,6 +162,12 @@ class SimConfig:
     # each sequential select would legitimately observe fresher telemetry).
     dispatch_mode: str = "plane"            # "plane" | "reference"
     staging_capacity: float = 512e9         # per-pod DRAM KV store (multihop)
+    # TracePlane (sim/trace.py): lifecycle spans + decision forensics.
+    # Off by default — no span allocation, no hook calls on the hot path.
+    # Also auto-enabled for the run when a process-wide TraceSession is
+    # active (benchmarks/run.py --trace).
+    trace: bool = False
+    trace_decisions: int = 1                # record every Nth decision
 
 
 class Simulation:
@@ -290,6 +296,15 @@ class Simulation:
                 self.engine.on_phase3_cohort = self._phase3_cohort
         self.engine.set_decode_callbacks(lambda rs, now: None,
                                          lambda rs, now: None)
+        # TracePlane: created only when asked for — every emission site
+        # below is behind an ``is not None`` guard, so the untraced hot
+        # path costs one attribute load per site and allocates nothing.
+        self.trace: TracePlane | None = None
+        if cfg.trace or trace_session() is not None:
+            self.trace = TracePlane(decision_stride=cfg.trace_decisions)
+            self.engine.trace = self.trace
+            self.sched.trace_hook = self.trace
+            self.net.record_bottlenecks = True
 
     # ---------------------------------------------------------------- trace
     def load_trace(self, trace: Sequence[Request]) -> None:
@@ -340,6 +355,8 @@ class Simulation:
             # never streams anything: admission is latency-only from here.
             if rs.s_eff <= 0.0 and rs.stream_open == 0 and not rs.stream_last:
                 lat = self.tree.tier_latency[rs.tier]
+                if self.trace is not None:
+                    self.trace.lat_segment(rs, now, now + lat)
                 self.loop.after(lat,
                                 lambda t, rs=rs: self._on_transfer_done(rs, None, t))
             return
@@ -401,9 +418,13 @@ class Simulation:
             # Degenerate: the tail rounded to zero bytes with nothing in
             # flight — admission is latency-only, like a full hit.
             lat = self.tree.tier_latency[rs.tier]
+            if self.trace is not None:
+                self.trace.lat_segment(rs, now, now + lat)
             self.loop.after(lat, lambda t, rs=rs: self._on_transfer_done(rs, None, t))
 
     def _on_chunk_transfer_done(self, rs: RequestState, transfer, now: float) -> None:
+        if self.trace is not None:
+            self.trace.segment(rs, transfer)
         rs.stream_open -= 1
         if rs.stream_last and rs.stream_open == 0:
             # Last byte of the last chunk: admit through the usual
@@ -447,12 +468,14 @@ class Simulation:
         view = self.oracle.view(now)
         if isinstance(self.sched, NetKVMultiHop):
             self.sched.observe_request(req.block_hashes)
+        if self.trace is not None:
+            self.trace.now = now
         t0 = _time.perf_counter()
         decision = self.sched.select(info, rs.prefill_instance, self.view, view,
                                      self.inflight)
         dt = _time.perf_counter() - t0
         self.decision_latencies.append(dt)
-        note_select(dt)
+        self.loop.note_select(dt)
         if decision is None:
             rs.rejected = True
             self.rejected += 1
@@ -485,11 +508,13 @@ class Simulation:
         """Cohort-path twin of ``_schedule_one``: row k's batched decision,
         with the cohort's one-time setup cost folded into the first row's
         latency so the per-decision metric stays comparable."""
+        if self.trace is not None:
+            self.trace.now = now
         t0 = _time.perf_counter()
         decision = sel.select_row(k)
         dt = (_time.perf_counter() - t0) + sel.take_setup_time()
         self.decision_latencies.append(dt)
-        note_select(dt)
+        self.loop.note_select(dt)
         if decision is None:
             rs.rejected = True
             self.rejected += 1
@@ -583,12 +608,14 @@ class Simulation:
             self._fill_hits(rs.req)
             hit_matrix[i] = self.view.column("hit_tokens")
         view = self.oracle.view(now)
+        if self.trace is not None:
+            self.trace.now = now
         t0 = _time.perf_counter()
         decisions = self.sched.select_batch(reqs, (self.view, hit_matrix), view,
                                             self.inflight)
         dt = _time.perf_counter() - t0
         self.decision_latencies.append(dt / len(window))
-        note_select(dt)
+        self.loop.note_select(dt)
         # Arrival epoch: the whole dispatch burst lands at one timestamp, so
         # the FlowPlane admits it with a single union rate recompute.
         self.net.begin_epoch()
@@ -626,6 +653,8 @@ class Simulation:
         if decision.s_eff <= 0.0:
             # 100% prefix hit: only base latency applies.
             lat = self.tree.tier_latency[decision.tier]
+            if self.trace is not None:
+                self.trace.lat_segment(rs, now, now + lat)
             self.loop.after(lat, lambda t, rs=rs: self._on_transfer_done(rs, None, t))
             return
         plan = None
@@ -636,6 +665,8 @@ class Simulation:
             pending = {"n": 0}
 
             def leg_done(tr, t, rs=rs, pending=pending, plan=plan):
+                if self.trace is not None:
+                    self.trace.segment(rs, tr)
                 pending["n"] -= 1
                 if pending["n"] == 0:
                     self.sched.staged_leg_done(plan.store_id)
@@ -653,6 +684,8 @@ class Simulation:
                 self._inbound.setdefault(decision.instance_id, []).append((rs, tr))
             if pending["n"] == 0:  # fully resident: latency only
                 lat = self.tree.tier_latency[decision.tier]
+                if self.trace is not None:
+                    self.trace.lat_segment(rs, now, now + lat)
                 self.loop.after(lat, lambda t, rs=rs: self._on_transfer_done(rs, None, t))
             if not self.net.in_epoch:
                 self._reschedule_net(now)
@@ -675,6 +708,10 @@ class Simulation:
         """
         rs.transfer_end = now
         if transfer is not None:
+            if self.trace is not None:
+                # Deduped by transfer id, so the streamed last chunk and the
+                # staged final leg (already emitted above) don't double-count.
+                self.trace.segment(rs, transfer)
             lst = self._inbound.get(rs.decode_instance, [])
             self._inbound[rs.decode_instance] = [
                 (r, t) for (r, t) in lst if r is not rs
@@ -861,6 +898,13 @@ class Simulation:
         horizon = self.cfg.warmup + self.cfg.measure + drain
         self.loop.run(until=horizon)
         self.engine.finalize()
+        if self.trace is not None:
+            # Whole-phase lifecycle spans derive from RequestState
+            # timestamps at the end — zero hot-path cost for them.
+            self.trace.finalize(self.records)
+            sess = trace_session()
+            if sess is not None:
+                sess.register(self.cfg.scheduler, self.trace, self.records)
         return summarize(
             self.records,
             window=(self.cfg.warmup, self.cfg.warmup + self.cfg.measure),
