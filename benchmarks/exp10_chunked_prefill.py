@@ -79,6 +79,13 @@ def run(quick: bool = False) -> list[dict]:
         for chunk in chunks:
             arms(sched, chunk, False, axis="sweep")
             arms(sched, chunk, True, axis="sweep")
+        # Auto-tuned arm: the EWMA controller picks chunk_tokens from the
+        # observed input lengths instead of a fixed setting (RolePlane
+        # satellite; compares against the fixed-chunk rows above).
+        point(f"autotune-{sched}", sched,
+              {"chunk_tokens": chunks[0], "prefill_token_budget": BUDGET,
+               "chunk_autotune": True},
+              axis="sweep", chunk=-1, streaming=0)
     # (c) long-context pin (full mode): serial vs best streamed arm.
     if not quick:
         for sched in ("cla", "netkv-full"):

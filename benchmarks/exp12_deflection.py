@@ -1,0 +1,128 @@
+"""Beyond-paper experiment 12: RolePlane — prefill deflection under storms.
+
+A prefill-storm grid over the rag workload (long-tailed 4k-64k inputs)
+with a deliberately thin prefill pool (2 instances), so prefill queueing
+— not the network or decode — dominates TTFT under load:
+
+(a) **Storm axis** — calm (well under prefill capacity) vs storm (several
+    times over it).  In calm cells the healthy-pool backlog never crosses
+    ``deflect_threshold``, so deflection must be a bit-exact no-op
+    (``deflected_frac == 0``).
+(b) **Deflection on/off x schedulers** — with deflection on, arrivals
+    that find the prefill pool backlogged are offered to decode hosts as
+    prefill targets (Eq. (4) collapses: the KV is born in place, zero
+    transfer, tier 0; ``Scheduler.select_deflected``).  Decode instances
+    meter the deflected chunks through the attachable ChunkPlane, so
+    decode SLOs degrade gracefully instead of prefill TTFT exploding.
+(c) **Role-flip arm** — the same storm with the LANE_ROLE slow loop
+    enabled: sustained backlog converts drained decode instances into
+    prefill workers (and back when the storm passes).
+
+The acceptance gate (main): under the storm arm, deflection-on must beat
+deflection-off mean TTFT for at least one netkv scheduler, and
+``deflected_frac`` must be nonzero only in storm cells.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+from repro.sim import SimConfig, run_sim
+from repro.sim.metrics import aggregate_seeds
+from repro.traces import generate_trace
+
+from .common import emit, knobs, write_csv
+
+SCHEDULERS = ["cla", "netkv-static", "netkv-full"]
+STORMS = {"calm": 1.5, "storm": 6.0}   # absolute rps (n_prefill=2 pool)
+N_PREFILL = 2                          # thin pool: prefill-bottlenecked
+CHUNK = 2048
+BUDGET = 4096
+THRESHOLD = 0.5                        # seconds of prefill backlog
+BACKGROUND = 0.2
+
+
+def run(quick: bool = False) -> list[dict]:
+    k = knobs(quick)
+    rows: list[dict] = []
+
+    def point(label, sched, rate, cfg_kw, **tags):
+        runs = []
+        sims = []
+        for seed in range(k["seeds"]):
+            trace = generate_trace("rag", duration=k["duration"],
+                                   target_rps=rate, seed=seed)
+            cfg = SimConfig(scheduler=sched, seed=seed, warmup=k["warmup"],
+                            measure=k["measure"], background=BACKGROUND,
+                            n_prefill=N_PREFILL, chunk_tokens=CHUNK,
+                            prefill_token_budget=BUDGET, **cfg_kw)
+            from repro.sim import Simulation
+            sim = Simulation(cfg)
+            runs.append(sim.run(trace, drain=40.0))
+            sims.append(sim)
+        row = aggregate_seeds(runs)
+        row["variant"] = label
+        row["deflections"] = sum(s.deflected for s in sims)
+        row["role_flips"] = sum(s.role_flips for s in sims)
+        row.update(tags)
+        rows.append(row)
+        print(f"  exp12 {label}: ttft={row['ttft_mean']*1e3:.0f}ms "
+              f"slo={row['slo_attainment']:.3f} "
+              f"defl_frac={row['deflected_frac']:.3f} "
+              f"flips={row['role_flips']}")
+        return row
+
+    for storm, rate in STORMS.items():
+        for sched in SCHEDULERS:
+            point(f"{storm}-off-{sched}", sched, rate, {"deflection": "off"},
+                  storm=storm, deflection=0, flips=0)
+            point(f"{storm}-on-{sched}", sched, rate,
+                  {"deflection": "on", "deflect_threshold": THRESHOLD},
+                  storm=storm, deflection=1, flips=0)
+    # (c) role-flip arm: storm + LANE_ROLE slow loop (deflection stays off
+    # so the flip effect is isolated).
+    point("storm-flip-netkv-full", "netkv-full", STORMS["storm"],
+          {"role_flip_interval": 0.5, "role_flip_sustain": 2,
+           "role_flip_hi": 0.3, "role_flip_lo": 0.05},
+          storm="storm", deflection=0, flips=1)
+    write_csv("exp12_deflection", rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    by = {r["variant"]: r for r in rows}
+    # Gate 1: deflected_frac nonzero ONLY in storm cells.
+    for r in rows:
+        frac = r["deflected_frac"]
+        if r["storm"] == "calm" and frac > 0:
+            raise RuntimeError(
+                f"deflection fired in calm cell {r['variant']}: {frac}")
+        if not r["deflection"] and frac > 0:
+            raise RuntimeError(
+                f"deflected_frac nonzero with deflection off: {r['variant']}")
+    # Gate 2: under the storm, deflection-on beats deflection-off mean
+    # TTFT for at least one netkv scheduler.
+    wins = []
+    for sched in ("netkv-static", "netkv-full"):
+        off = by[f"storm-off-{sched}"]["ttft_mean"]
+        on = by[f"storm-on-{sched}"]["ttft_mean"]
+        if math.isfinite(off) and math.isfinite(on) and on < off:
+            wins.append((sched, (1 - on / off) * 100))
+    if not wins:
+        raise RuntimeError("deflection-on failed to beat deflection-off "
+                           "mean TTFT under the storm arm")
+    sched, cut = max(wins, key=lambda w: w[1])
+    storm_on = by[f"storm-on-{sched}"]
+    derived = (f"storm_ttft_cut={cut:.1f}%({sched});"
+               f"storm_defl_frac={storm_on['deflected_frac']:.2f};"
+               f"flips={by['storm-flip-netkv-full']['role_flips']}")
+    emit("exp12_deflection", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         derived)
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

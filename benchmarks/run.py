@@ -31,6 +31,7 @@ from . import (
     exp9_extensions,
     exp10_chunked_prefill,
     exp11_scenario_sweep,
+    exp12_deflection,
     net_throughput,
     roofline,
     sched_latency,
@@ -48,6 +49,7 @@ HARNESSES = {
     "exp9": exp9_extensions,       # beyond-paper: TopoPlane (multi-NIC + OCS rewire)
     "exp10": exp10_chunked_prefill,  # beyond-paper: ChunkPlane (chunked prefill + streamed KV)
     "exp11": exp11_scenario_sweep,   # beyond-paper: ScenarioPlane batched what-if sweeps
+    "exp12": exp12_deflection,       # beyond-paper: RolePlane (deflection + P:D flips)
     "sched_latency": sched_latency,
     "net_throughput": net_throughput,      # FlowPlane vs reference engine
     "decode_throughput": decode_throughput,  # InstancePlane vs reference

@@ -144,6 +144,23 @@ def streamed_transfer_time(
     return max(s_eff / beff, prefill_remaining + tail / beff) + tier_latency
 
 
+def deflected_cost(deflect_eta, decode_load):
+    """Deflected-candidate branch of the Eq. (5) objective (RolePlane).
+
+    When a prefill storm deflects chunked prefill onto a decode host, the
+    KV is *born* on the target — Eq. (2) gives s_eff = 0 and Eq. (3)/(4)
+    collapse entirely (no wire, no tier, no self-contention).  What
+    remains is the target's deflected-chunk-queue drain ETA plus the
+    decode-side Eq. (6)/(7) load (``decode_load`` = T_queue + T_decode,
+    pre-summed by the caller so the sequential ladder and the fused R x D
+    cohort path share one IEEE op sequence — bit-exact parity between
+    them reduces to sharing this helper):
+
+        C_defl[d] = ETA_defl(d) + (T_queue(d) + T_decode(d))
+    """
+    return deflect_eta + decode_load
+
+
 @dataclasses.dataclass(frozen=True)
 class IterTimeModel:
     """Piecewise-linear iteration-time model  t_iter(beta) = a + b * beta.

@@ -47,7 +47,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from .cost import effective_bandwidth_tiers, transfer_time
+from .cost import deflected_cost, effective_bandwidth_tiers, transfer_time
 from .oracle import OracleView, SelfContentionTracker, TIERS
 from .schedulers import (
     CacheAware,
@@ -63,9 +63,10 @@ from .schedulers import (
     Scheduler,
     _runner_up,
 )
-from .view import ClusterView
+from .view import ROLE_DECODE, ClusterView
 
-__all__ = ["CohortItem", "CohortSelector", "supports_cohort"]
+__all__ = ["CohortItem", "CohortSelector", "DeflectedCohortSelector",
+           "supports_cohort"]
 
 # Exact-type -> scoring shape.  Subclasses of the ladder types are not
 # assumed to keep the parent's op sequence, so membership is by type.
@@ -294,7 +295,8 @@ class CohortSelector:
                      for it in items]
         costs, best = netkv_score_cohort(
             cv.column("free_memory"), cv.column("queued"), cv.column("batch"),
-            self.H[rows], tier_rows, cv.column("healthy"),
+            self.H[rows], tier_rows,
+            cv.column("healthy") & (cv.column("role") == ROLE_DECODE),
             cv.column("iter_scale"),
             [oracle.tier_bandwidth[t] for t in TIERS],
             [oracle.tier_latency[t] for t in TIERS],
@@ -309,7 +311,8 @@ class CohortSelector:
         self._pl_costs = np.asarray(costs)
         self._pl_best = np.asarray(best)
         self._free0 = cv.column("free_memory").copy()
-        self._healthy0 = cv.column("healthy").copy()
+        self._healthy0 = (cv.column("healthy")
+                          & (cv.column("role") == ROLE_DECODE)).copy()
         # The kernel masks in f32: replicate its s_eff + m_min threshold so
         # feasibility flips from later reserves are detected in f32 terms.
         h32 = self.H[rows].astype(np.float32)
@@ -362,7 +365,7 @@ class CohortSelector:
         req, pid = item.req, item.prefill_id
         sched, cv, oracle = self._sched, self._cv, self._oracle
         se = self.SE[k]
-        mask = cv.column("healthy") & (
+        mask = cv.column("healthy") & (cv.column("role") == ROLE_DECODE) & (
             cv.column("free_memory") >= se + sched.m_min)
         idx = np.flatnonzero(mask)
         if idx.size == 0:
@@ -465,7 +468,8 @@ class CohortSelector:
         since the snapshot (cost entries don't read free_memory, so an
         unchanged mask means an unchanged row)."""
         cv = self._cv
-        if not np.array_equal(cv.column("healthy"), self._healthy0):
+        live = cv.column("healthy") & (cv.column("role") == ROLE_DECODE)
+        if not np.array_equal(live, self._healthy0):
             return False
         free = cv.column("free_memory")
         changed = np.flatnonzero(free != self._free0)
@@ -514,3 +518,49 @@ class CohortSelector:
                 self._infl_dirty.add(pid)
             self._watch_slot(d.instance_id)
         return d
+
+
+class DeflectedCohortSelector:
+    """Fused R x D twin of sequential ``Scheduler.select_deflected`` calls.
+
+    The deflected objective (``core/cost.py::deflected_cost``) has no
+    network term, so the whole cohort shares ONE Eq. (6)/(7) load vector
+    (cohort-invariant: deflected requests enqueue on decode only at prefill
+    completion, never between the rows of one cohort) and only two columns
+    move between rows: the winner's deflect-queue ETA grows by its own
+    ``c*l + d`` and its free memory shrinks by the pinned KV.  Each row
+    applies exactly that O(1) delta — same values the live ChunkPlane ETA
+    fold and ``reserve`` would produce — so ``select_row(0..R-1)`` is
+    bit-identical (decisions AND RNG tie draws) to the sequential ladder
+    walking the live view.  Proven by ``tests/test_roleplane.py``.
+    """
+
+    def __init__(self, sched: Scheduler, reqs: Sequence[RequestInfo],
+                 cv: ClusterView, deflect_eta: np.ndarray,
+                 prefill_model) -> None:
+        self._sched = sched
+        self._reqs = list(reqs)
+        self._cv = cv
+        self._model = prefill_model
+        self._eta = np.array(deflect_eta, np.float64)
+        self._free = cv.column("free_memory").copy()
+        self._role_ok = cv.column("healthy") \
+            & (cv.column("role") == ROLE_DECODE)
+        self._load = sched._t_queue_vec(cv) + sched._t_decode_vec(cv)
+
+    def select_row(self, k: int) -> Optional[Decision]:
+        sched = self._sched
+        req = self._reqs[k]
+        mask = self._role_ok & (self._free >= req.kv_bytes + sched.m_min)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
+            return None
+        cost = deflected_cost(self._eta, self._load)
+        ties = sched._ties(idx.size)
+        j = int(idx[np.lexsort((ties, cost[idx]))[0]])
+        # O(1) winner delta: the ETA fold of submitting this request's
+        # chunks (+ c*l + d) and the reserve-time pin, mirroring what the
+        # live ChunkPlane/engine do between sequential selections.
+        self._eta[j] += self._model.c * req.input_len + self._model.d
+        self._free[j] = max(self._free[j] - req.kv_bytes, 0.0)
+        return Decision(int(self._cv.ids[j]), float(cost[j]), 0.0, 0, 0.0)

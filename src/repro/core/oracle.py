@@ -13,6 +13,12 @@ Optionally the scheduler sends ``TransferIntent`` hints back to the operator.
 
 The oracle is deliberately tiny: tier classification + per-tier scalars.  It
 carries no raw topology, no per-link state, and no inference semantics.
+
+RolePlane note: *deflected* prefill (``Scheduler.select_deflected``) never
+consults the oracle — the KV materialises on the decode host itself, so
+Eq. (3)/(4) collapse to a zero-transfer term (tier 0, no congestion, no
+self-contention hint) and the only network-adjacent input is the host's
+deflected-chunk drain ETA from the instance engine.
 """
 
 from __future__ import annotations

@@ -39,11 +39,12 @@ import numpy as np
 
 from .cost import (
     IterTimeModel,
+    deflected_cost,
     effective_bandwidth_tiers,
     transfer_time,
 )
 from .oracle import OracleView, SelfContentionTracker, EWMACongestionPredictor, TIERS
-from .view import ClusterView, as_cluster_view
+from .view import ROLE_DECODE, ClusterView, as_cluster_view
 
 
 @dataclasses.dataclass
@@ -221,9 +222,15 @@ class Scheduler:
 
     # -- shared vector components -------------------------------------------
     def _prep(self, req: RequestInfo, cv: ClusterView):
-        """(s_eff vector, feasibility mask) — line 1 of Alg. 1."""
+        """(s_eff vector, feasibility mask) — line 1 of Alg. 1.
+
+        Candidates are the ROLE_DECODE rows of the unified instance axis;
+        with every row decode (no flips) the role term is all-True and the
+        mask is bit-identical to the pre-RolePlane two-pool filter.
+        """
         s_eff = v_s_eff(req.kv_bytes, cv.column("hit_tokens"), req.input_len)
-        mask = cv.column("healthy") & (cv.column("free_memory") >= s_eff + self.m_min)
+        mask = cv.column("healthy") & (cv.column("role") == ROLE_DECODE) \
+            & (cv.column("free_memory") >= s_eff + self.m_min)
         return s_eff, mask
 
     def _t_queue_vec(self, cv: ClusterView) -> np.ndarray:
@@ -291,6 +298,34 @@ class Scheduler:
             self, items, as_cluster_view(cands, oracle), oracle, inflight,
             hit_matrix=hit_matrix, hit_fn=hit_fn, evictions_fn=evictions_fn,
         )
+
+    # -- prefill deflection (RolePlane) -------------------------------------
+    def select_deflected(self, req: RequestInfo, cands,
+                         deflect_eta) -> Optional[Decision]:
+        """Score ROLE_DECODE rows as *prefill* targets (deflection).
+
+        The KV is born on the decode host, so Eq. (4) collapses — no wire,
+        no tier gather, no self-contention bump; the network term of the
+        objective is replaced by the target's deflected-chunk-queue drain
+        ETA (``deflect_eta``, relative seconds) and the decode-side
+        Eq. (6)/(7) load stays (``core/cost.py::deflected_cost``).
+        Feasibility requires room for the request's *full* KV (it
+        materialises locally, nothing is prefix-elided): ``m_d >= s_r +
+        m_min``.  One RNG tie draw per feasible candidate, same stream as
+        ``select`` — with deflection off this is never called and the
+        stream is untouched.
+        """
+        cv = as_cluster_view(cands)
+        eta = np.asarray(deflect_eta, np.float64)
+        mask = cv.column("healthy") & (cv.column("role") == ROLE_DECODE) \
+            & (cv.column("free_memory") >= req.kv_bytes + self.m_min)
+        idx = np.flatnonzero(mask)
+        if idx.size == 0:
+            return None
+        cost = deflected_cost(eta, self._t_queue_vec(cv) + self._t_decode_vec(cv))
+        ties = self._ties(idx.size)
+        j = int(idx[np.lexsort((ties, cost[idx]))[0]])
+        return Decision(int(cv.ids[j]), float(cost[j]), 0.0, 0, 0.0)
 
 
 class RoundRobin(Scheduler):
@@ -488,7 +523,8 @@ class NetKVFull(Scheduler):
         nfl = self._n_by_tier(inflight, prefill_id)
         costs, best = netkv_score(
             cv.column("free_memory"), cv.column("queued"), cv.column("batch"),
-            cv.column("hit_tokens"), tier_row, cv.column("healthy"),
+            cv.column("hit_tokens"), tier_row,
+            cv.column("healthy") & (cv.column("role") == ROLE_DECODE),
             cv.column("iter_scale"),
             [oracle.tier_bandwidth[t] for t in TIERS],
             [oracle.tier_latency[t] for t in TIERS],

@@ -45,6 +45,13 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+# Instance roles (RolePlane).  One instance axis, role as a column: the
+# schedulers mask candidates to ROLE_DECODE rows, the deflection path masks
+# to the same rows when scoring decode hosts as prefill targets, and the
+# role-flip controller rewrites the column in place (no pool rebuild).
+ROLE_PREFILL = 0
+ROLE_DECODE = 1
+
 
 class ClusterView:
     """Columnar scheduler<->simulator interface over the decode pool."""
@@ -61,6 +68,7 @@ class ClusterView:
         self.iter_scale = np.ones(capacity, np.float64)
         self.healthy = np.zeros(capacity, bool)
         self.hit_tokens = np.zeros(capacity, np.float64)
+        self.role = np.full(capacity, ROLE_DECODE, np.int64)
         self._slot: dict[int, int] = {}
         self._tier_rows: dict[int, np.ndarray] = {}
 
@@ -71,16 +79,18 @@ class ClusterView:
     def _grow(self) -> None:
         cap = len(self.ids) * 2
         for name in ("ids", "free_memory", "queued", "batch", "iter_scale",
-                     "healthy", "hit_tokens"):
+                     "healthy", "hit_tokens", "role"):
             old = getattr(self, name)
-            new = np.zeros(cap, old.dtype)
+            new = np.full(cap, ROLE_DECODE, old.dtype) if name == "role" \
+                else np.zeros(cap, old.dtype)
             new[: self.n] = old[: self.n]
             setattr(self, name, new)
 
     def add_instance(self, instance_id: int, *, free_memory: float = 0.0,
                      queued: int = 0, batch: int = 0, hit_tokens: float = 0.0,
-                     healthy: bool = True, iter_scale: float = 1.0) -> int:
-        """Register a decode instance; returns its (stable) column slot."""
+                     healthy: bool = True, iter_scale: float = 1.0,
+                     role: int = ROLE_DECODE) -> int:
+        """Register an instance; returns its (stable) column slot."""
         if instance_id in self._slot:
             raise ValueError(f"instance {instance_id} already registered")
         if self.n == len(self.ids):
@@ -94,6 +104,7 @@ class ClusterView:
         self.iter_scale[s] = iter_scale
         self.healthy[s] = healthy
         self.hit_tokens[s] = hit_tokens
+        self.role[s] = role
         self._slot[instance_id] = s
         self._tier_rows.clear()  # cached rows are now one column short
         return s

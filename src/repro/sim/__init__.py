@@ -2,7 +2,7 @@
 
 from .engine import (
     LANE_ARRIVAL, LANE_CLOCK, LANE_FAULT, LANE_GENERIC, LANE_NET,
-    LANE_PREFILL, LANE_REWIRE, LANE_TICK, LANE_NAMES, N_LANES,
+    LANE_PREFILL, LANE_REWIRE, LANE_ROLE, LANE_TICK, LANE_NAMES, N_LANES,
     EventLoop, EventPlane, make_event_loop,
 )
 from .kvcache import B_TOK, BlockCache, RadixPlane, n_blocks
@@ -23,7 +23,8 @@ from .trace import (
 __all__ = [
     "EventLoop", "EventPlane", "make_event_loop",
     "LANE_GENERIC", "LANE_ARRIVAL", "LANE_FAULT", "LANE_REWIRE", "LANE_NET",
-    "LANE_TICK", "LANE_CLOCK", "LANE_PREFILL", "LANE_NAMES", "N_LANES",
+    "LANE_TICK", "LANE_CLOCK", "LANE_ROLE", "LANE_PREFILL", "LANE_NAMES",
+    "N_LANES",
     "B_TOK", "BlockCache", "RadixPlane", "n_blocks",
     "ChunkPlane", "InstancePlane", "DecodeHandle", "PrefillHandle",
     "ChunkedPrefillSim", "DecodeSim", "PrefillSim", "ReferenceInstanceEngine",

@@ -51,13 +51,14 @@ LANE_REWIRE = 3    # OCS rewire schedule (cursor)
 LANE_NET = 4       # next flow-completion timer (slot)
 LANE_TICK = 5      # fixed-interval network rate refresh (slot)
 LANE_CLOCK = 6     # instance-iteration cohort clock (slot, horizon-batched)
-LANE_PREFILL = 7   # per-instance prefill/chunk iteration timers (multi-slot)
-N_LANES = 8
+LANE_ROLE = 7      # RolePlane P:D imbalance controller timer (slot)
+LANE_PREFILL = 8   # per-instance prefill/chunk iteration timers (multi-slot)
+N_LANES = 9
 LANE_NAMES = ("generic", "arrival", "fault", "rewire", "net", "tick",
-              "clock", "prefill")
+              "clock", "role", "prefill")
 
 _CURSOR_LANES = (LANE_ARRIVAL, LANE_FAULT, LANE_REWIRE)
-_SLOT_LANES = (LANE_NET, LANE_TICK, LANE_CLOCK)
+_SLOT_LANES = (LANE_NET, LANE_TICK, LANE_CLOCK, LANE_ROLE)
 
 _INF = float("inf")
 

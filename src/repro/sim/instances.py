@@ -59,7 +59,7 @@ from repro.core.cost import (
     PrefillTimeModel,
     iter_time_vector,
 )
-from repro.core.view import ClusterView
+from repro.core.view import ROLE_DECODE, ROLE_PREFILL, ClusterView
 from repro.traces.mooncake import Request
 from .engine import LANE_CLOCK, LANE_PREFILL, EventLoop
 from .kvcache import RadixPlane
@@ -85,6 +85,7 @@ class RequestState:
     tokens_out: int = 0
     rejected: bool = False
     requeues: int = 0  # fault-tolerance: times re-scheduled after a failure
+    deflected: bool = False  # RolePlane: prefilled on the decode host itself
     # ---- chunked-prefill / streamed-transfer bookkeeping (ChunkPlane) ----
     tokens_ready: int = 0        # prefilled tokens whose KV exists (chunked)
     streamed_bytes: float = 0.0  # bytes handed to the network so far
@@ -248,7 +249,9 @@ class ChunkPlane:
     """
 
     def __init__(self, owner: "InstancePlane", n_pre: int, *,
-                 chunk_tokens: int, token_budget: int | None):
+                 chunk_tokens: int, token_budget: int | None,
+                 ids_attr: str = "p_ids", healthy_attr: str = "p_healthy",
+                 deflect: bool = False):
         if int(chunk_tokens) <= 0:
             raise ValueError("chunk_tokens must be positive")
         self.owner = owner
@@ -258,15 +261,37 @@ class ChunkPlane:
             else int(chunk_tokens)
         if self.budget <= 0:
             raise ValueError("prefill_token_budget must be positive")
+        # The plane is *attachable*: ``ids_attr``/``healthy_attr`` name the
+        # owner columns its slots index, so the same token-budget iteration
+        # clock can meter prefill hosts (the default) or decode hosts
+        # (RolePlane's deflected-prefill twin, ``deflect=True``).  Column
+        # arrays are re-read through getattr at use time because the owner
+        # reallocates them on growth.  Deflect mode reroutes completion
+        # callbacks to ``on_deflect_done`` and emits "deflect" trace spans.
+        self._ids_attr = ids_attr
+        self._healthy_attr = healthy_attr
+        self.deflect_mode = deflect
         self.busy = np.zeros(n_pre, np.float64)
         self.backlog = np.zeros(n_pre, np.int64)
         self.pending = np.zeros(n_pre, np.int64)
         self.streams: list[list[_ChunkStream]] = [[] for _ in range(n_pre)]
         self.inflight: list[Optional[list]] = [None] * n_pre
         self.iterations = 0      # telemetry: chunked prefill iterations
+        self.busy_s = 0.0        # telemetry: cumulative iteration seconds
         # Iteration start times, kept only while tracing (chunk spans need
         # the [start, end) interval of the iteration that served them).
         self.iter_base = np.zeros(n_pre, np.float64)
+
+    def add_slot(self) -> int:
+        """Grow by one slot (elastic owner columns: add_decode/add_prefill)."""
+        s = len(self.busy)
+        self.busy = np.append(self.busy, 0.0)
+        self.backlog = np.append(self.backlog, np.int64(0))
+        self.pending = np.append(self.pending, np.int64(0))
+        self.iter_base = np.append(self.iter_base, 0.0)
+        self.streams.append([])
+        self.inflight.append(None)
+        return s
 
     # ------------------------------------------------------------- routing
     def eta_row(self, now: float, n: int) -> np.ndarray:
@@ -316,7 +341,8 @@ class ChunkPlane:
 
     # ------------------------------------------------- iteration scheduling
     def _maybe_start(self, s: int, now: float) -> None:
-        if self.inflight[s] is not None or not self.owner.p_healthy[s] \
+        if self.inflight[s] is not None \
+                or not getattr(self.owner, self._healthy_attr)[s] \
                 or self.backlog[s] == 0:
             return
         base = float(max(self.busy[s], now))
@@ -341,6 +367,7 @@ class ChunkPlane:
         self.backlog[s] -= total
         self.pending[s] -= nfirst
         self.busy[s] = base + (self.model.c * total + self.model.d * nfirst)
+        self.busy_s += float(self.busy[s]) - base
         if self.owner.trace is not None:
             self.iter_base[s] = base
         self.inflight[s] = served
@@ -362,15 +389,16 @@ class ChunkPlane:
         live: list[_ChunkStream] = []
         n_live = 0               # served entries still present in `streams`
         tr = owner.trace
-        iid = int(owner.p_ids[s])
+        iid = int(getattr(owner, self._ids_attr)[s])
         base = float(self.iter_base[s])
+        kind = "deflect" if self.deflect_mode else "chunk"
         for st, take in served:
             if st.cancelled:
                 continue
             n_live += 1
             st.done += take
             if tr is not None:
-                tr.chunk(st.rs, iid, base, now, take, st.done)
+                tr.chunk(st.rs, iid, base, now, take, st.done, kind=kind)
             live.append(st)
             if st.done < st.rs.req.input_len:
                 rotated.append(st)
@@ -381,20 +409,28 @@ class ChunkPlane:
         # callback cancelled (requeued mid-phase).  With cohort dispatch
         # enabled, a multi-stream iteration hands the whole served batch
         # over in one call so same-instant selections fuse (the handler
-        # replicates this loop's per-stream semantics exactly).
-        if owner.on_phase3_cohort is not None and len(live) > 1:
-            owner.on_phase3_cohort(live, now)
+        # replicates this loop's per-stream semantics exactly).  Deflected
+        # chunks never stream or cohort-dispatch: the KV is born on the
+        # decode host, so only the completion callback matters.
+        if self.deflect_mode:
+            cohort_cb, chunk_cb, done_cb = None, None, owner.on_deflect_done
+        else:
+            cohort_cb = owner.on_phase3_cohort
+            chunk_cb = owner.on_chunk_done
+            done_cb = owner.on_prefill_done
+        if cohort_cb is not None and len(live) > 1:
+            cohort_cb(live, now)
         else:
             for st in live:
                 if st.cancelled:
                     continue
                 rs = st.rs
-                if owner.on_chunk_done is not None:
-                    owner.on_chunk_done(rs, st.done, now)
+                if chunk_cb is not None:
+                    chunk_cb(rs, st.done, now)
                 if st.done >= rs.req.input_len:
                     rs.prefill_end = now
-                    if owner.on_prefill_done is not None:
-                        owner.on_prefill_done(rs, now)
+                    if done_cb is not None:
+                        done_cb(rs, now)
         self._maybe_start(s, now)
 
 
@@ -419,6 +455,9 @@ class InstancePlane:
         self.chunk_tokens = chunk_tokens
         self.on_prefill_done: Callable[[RequestState, float], None] | None = None
         self.on_chunk_done: Callable[[RequestState, int, float], None] | None = None
+        # RolePlane deflected-prefill completion hook (fires from the
+        # deflect ChunkPlane over decode slots; see enable_deflection).
+        self.on_deflect_done: Callable[[RequestState, float], None] | None = None
         # TracePlane sink (sim/trace.py), set by the Simulation when
         # tracing; None keeps every emission site a dead branch.
         self.trace = None
@@ -453,6 +492,11 @@ class InstancePlane:
             self, n_pre, chunk_tokens=chunk_tokens,
             token_budget=prefill_token_budget,
         ) if chunk_tokens is not None else None
+        # Deflect twin over the decode slots (None until enable_deflection).
+        self.deflect: ChunkPlane | None = None
+        # Per-role busy-second accumulators (RunMetrics utilization rows).
+        self._p_busy_s = 0.0      # serial prefill (chunked lives in .chunks)
+        self.decode_busy_s = 0.0
 
         # ---------- decode columns (elastic membership) -------------------
         cap = max(len(dec_meta), 1)
@@ -537,6 +581,24 @@ class InstancePlane:
         eta = np.where(self.p_healthy[:n], eta, np.inf)
         return self.prefill[int(np.argmin(eta))]
 
+    def prefill_backlog(self, now: float) -> float:
+        """RolePlane imbalance signal: best-case prefill wait in seconds.
+
+        Min-over-healthy-instances drain ETA minus ``now`` — the value the
+        deflection gate and the P:D flip controller threshold against.
+        ``inf`` when no healthy prefill instance exists.
+        """
+        n = self.n_pre
+        if n == 0 or not self.p_healthy[:n].any():
+            return float("inf")
+        if self.chunks is not None:
+            eta = self.chunks.eta_row(now, n)
+        else:
+            eta = np.where(self.p_qlen[:n] > 0, self.p_eta[:n],
+                           np.maximum(self.p_busy[:n], now))
+        eta = np.where(self.p_healthy[:n], eta, np.inf)
+        return float(eta.min()) - now
+
     def submit_prefill(self, s: int, rs: RequestState, now: float) -> None:
         rs.prefill_instance = int(self.p_ids[s])
         if self.chunks is not None:
@@ -564,8 +626,11 @@ class InstancePlane:
 
         Only reachable in chunked mode: with serial prefill, transfers —
         and hence fault requeues — only exist after prefill completes.
+        Deflected requests cancel on the deflect plane (decode slots).
         """
-        if self.chunks is not None:
+        if rs.deflected and self.deflect is not None:
+            self.deflect.cancel(self.view.slot_of(rs.prefill_instance), rs)
+        elif self.chunks is not None:
             self.chunks.cancel(self._pre_slot[rs.prefill_instance], rs)
 
     def _prefill_start(self, s: int, now: float) -> None:
@@ -576,6 +641,7 @@ class InstancePlane:
         self.p_running[s] = rs
         rs.prefill_start = float(max(now, self.p_busy[s]))
         dur = self.prefill_model(rs.req.input_len)
+        self._p_busy_s += dur
         self.p_busy[s] = rs.prefill_start + dur
         # Rebuild the ETA fold from the new base — the same left-to-right
         # addition order the reference's eta() walk performs.
@@ -623,6 +689,137 @@ class InstancePlane:
             self.on_prefill_done(rs, now)
         self._prefill_start(s, now)
 
+    def add_prefill(self, iid: int, server) -> PrefillHandle:
+        """Elastic prefill membership: append one prefill slot (RolePlane
+        flips and the ``add_prefill`` fault kind)."""
+        s = self.n_pre
+        self.n_pre = s + 1
+        self.p_ids = np.append(self.p_ids, np.int64(iid))
+        self.p_server.append(server)
+        self.p_busy = np.append(self.p_busy, 0.0)
+        self.p_eta = np.append(self.p_eta, 0.0)
+        self.p_qlen = np.append(self.p_qlen, np.int64(0))
+        self.p_healthy = np.append(self.p_healthy, True)
+        self.p_queue.append(deque())
+        self.p_running.append(None)
+        h = PrefillHandle(self, s)
+        self.prefill.append(h)
+        self._pre_slot[int(iid)] = s
+        if self.chunks is not None:
+            self.chunks.add_slot()
+        return h
+
+    def fail_prefill(self, iid: int, now: float) -> list[RequestState]:
+        """Hard prefill failure: drop queued/in-flight work, return victims
+        for re-scheduling (``kill_prefill`` fault kind).  Victims come back
+        in the reference's order: the running request (chunked: stream list
+        order), then the queue."""
+        s = self._pre_slot[iid]
+        self.p_healthy[s] = False
+        victims: list[RequestState] = []
+        if self.chunks is not None:
+            for st in list(self.chunks.streams[s]):
+                victims.append(st.rs)
+                self.chunks.cancel(s, st.rs)
+            return victims
+        if self.p_running[s] is not None:
+            victims.append(self.p_running[s])
+            self.p_running[s] = None
+        victims.extend(self.p_queue[s])
+        self.p_queue[s].clear()
+        self.p_qlen[s] = 0
+        return victims
+
+    def prefill_drained(self, iid: int) -> bool:
+        """No running or queued prefill work on ``iid`` (flip precondition)."""
+        s = self._pre_slot[iid]
+        if self.chunks is not None:
+            return not self.chunks.streams[s] and self.chunks.inflight[s] is None
+        return self.p_running[s] is None and not self.p_queue[s]
+
+    def decode_drained(self, iid: int) -> bool:
+        """No active batch, queue, or deflected stream on ``iid``."""
+        s = self.view.slot_of(iid)
+        if self.d_active[s] or self.d_qlen[s] or not self.d_healthy[s]:
+            return False
+        if self.deflect is not None and (
+                self.deflect.streams[s] or self.deflect.inflight[s] is not None):
+            return False
+        return True
+
+    def flip_role(self, iid: int, role: int, now: float) -> None:
+        """Planned role transition (RolePlane slow control loop).
+
+        The caller drains first (``decode_drained``/``prefill_drained``);
+        the flip itself is then pure bookkeeping: the ``ClusterView`` role
+        column resyncs so the scheduler ladder and the cohort selector mask
+        the instance out of (or back into) the candidate set, and a
+        decode->prefill flip performs the RadixPlane handoff — the prefix
+        cache is dropped (contents *and* counters), because a prefill host
+        keeps no decode-side radix state.
+        """
+        s = self.view.slot_of(iid)
+        if role == ROLE_PREFILL:
+            self.view.role[s] = ROLE_PREFILL
+            self.cache.reset_instance(s)
+            self._sync_slot(s)
+            ps = self._pre_slot.get(int(iid))
+            if ps is not None:
+                self.p_healthy[ps] = True
+            else:
+                self.add_prefill(iid, self.d_server[s])
+        elif role == ROLE_DECODE:
+            self.p_healthy[self._pre_slot[int(iid)]] = False
+            self.view.role[s] = ROLE_DECODE
+            self._sync_slot(s)
+        else:
+            raise ValueError(f"unknown role {role!r}")
+
+    # ------------------------------------------------------------ deflection
+    def enable_deflection(self) -> ChunkPlane:
+        """Attach the deflect ChunkPlane over the decode slots.
+
+        Reuses the prefill plane's chunk/budget settings: a deflected
+        request is metered by the same token-budget iteration clock, just
+        on a decode host — its KV is born there, so completion feeds
+        straight into reserve/enqueue with no transfer.
+        """
+        if self.chunks is None:
+            raise ValueError("deflection requires chunked prefill "
+                             "(set chunk_tokens)")
+        if self.deflect is None:
+            self.deflect = ChunkPlane(
+                self, self.n_dec, chunk_tokens=self.chunks.chunk,
+                token_budget=self.chunks.budget,
+                ids_attr="d_ids", healthy_attr="d_healthy", deflect=True,
+            )
+        return self.deflect
+
+    def deflect_eta_row(self, now: float) -> np.ndarray:
+        """Per-decode-slot deflected-chunk drain ETA (Eq. (5) deflected
+        branch's ETA_defl term, aligned with ClusterView slots)."""
+        return self.deflect.eta_row(now, self.n_dec)
+
+    def submit_deflected(self, iid: int, rs: RequestState, now: float) -> None:
+        rs.prefill_instance = int(iid)
+        rs.deflected = True
+        self.deflect.submit(self.view.slot_of(iid), rs, now)
+
+    def set_chunking(self, chunk_tokens: int, token_budget: int) -> None:
+        """Retune chunk size / per-iteration token budget (auto-tuner).
+
+        Iterations already in flight keep their claimed durations; the next
+        ``_maybe_start`` on every instance reads the new values.
+        """
+        if self.chunks is None:
+            raise ValueError("set_chunking requires chunked prefill")
+        if int(chunk_tokens) <= 0 or int(token_budget) <= 0:
+            raise ValueError("chunk_tokens / token_budget must be positive")
+        for plane in (self.chunks, self.deflect):
+            if plane is not None:
+                plane.chunk = int(chunk_tokens)
+                plane.budget = int(token_budget)
+
     # ---------------------------------------------------------------- decode
     def add_decode(self, iid: int, server, kv_budget: float | None = None
                    ) -> DecodeHandle:
@@ -647,6 +844,8 @@ class InstancePlane:
         self.d_queue.append(deque())
         self._inst_rows.append([])
         self.cache.add_instance(budget)
+        if self.deflect is not None:
+            self.deflect.add_slot()
         h = DecodeHandle(self, s)
         self.decode.append(h)
         return h
@@ -740,6 +939,12 @@ class InstancePlane:
         self._inst_rows[s] = []
         victims = [self.r_obj[r] for r in rows]  # admission order
         victims.extend(self.d_queue[s])
+        if self.deflect is not None:
+            # Deflected requests still prefilling on the dead host requeue
+            # like everything else (post-prefill ones are already queued).
+            for st in list(self.deflect.streams[s]):
+                victims.append(st.rs)
+                self.deflect.cancel(s, st.rs)
         for r in rows:
             self._free_row(r)
         self.d_queue[s].clear()
@@ -827,6 +1032,7 @@ class InstancePlane:
         if active == 0:
             return
         dur = self.iter_model(active) * float(self.d_iter_scale[s])
+        self.decode_busy_s += dur
         self.d_deadline[s] = now + dur
 
     def _reschedule_clock(self) -> None:
@@ -946,6 +1152,7 @@ class InstancePlane:
                     t = t + dur
                 if not k:
                     continue
+                self.decode_busy_s += k * dur
                 dl[s] = t
                 est[s] = e
                 self.d_pinned[s] = p
@@ -1005,6 +1212,7 @@ class InstancePlane:
                 if ez.size:
                     dur = iter_time_vector(self.iter_model, self.d_active[ez]) \
                         * self.d_iter_scale[ez]
+                    self.decode_busy_s += float(dur.sum())
                     self.d_deadline[ez] = now + dur
                 rest = cohort[~easy]
             else:
@@ -1127,6 +1335,18 @@ class InstancePlane:
     @property
     def total_iterations(self) -> int:
         return int(self.d_iterations[: self.n_dec].sum())
+
+    @property
+    def prefill_busy_s(self) -> float:
+        """Cumulative prefill compute seconds (serial or chunked)."""
+        if self.chunks is not None:
+            return self.chunks.busy_s
+        return self._p_busy_s
+
+    @property
+    def deflect_busy_s(self) -> float:
+        """Cumulative deflected-prefill compute seconds on decode hosts."""
+        return self.deflect.busy_s if self.deflect is not None else 0.0
 
     def cache_stats(self) -> list[dict]:
         """Per-instance cache counters for the parity tests."""

@@ -42,6 +42,13 @@ class RunMetrics:
     admit_wait_p95: float = float("nan")
     xfer_share_mean: float = float("nan")
     xfer_share_p95: float = float("nan")
+    # RolePlane telemetry: per-role compute utilization over the run (busy
+    # seconds / instance-seconds, NaN when a role has no instances) and the
+    # fraction of finished measured requests whose prefill was deflected
+    # onto a decode host (0.0 with deflection off, NaN on empty windows).
+    prefill_util: float = float("nan")
+    decode_util: float = float("nan")
+    deflected_frac: float = float("nan")
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
@@ -62,7 +69,9 @@ def _mean(a: np.ndarray) -> float:
 
 def summarize(records, *, window: tuple[float, float], scheduler: str,
               decision_latencies=(), rejected: int = 0,
-              decode_iterations: int = 0) -> RunMetrics:
+              decode_iterations: int = 0,
+              prefill_util: float = float("nan"),
+              decode_util: float = float("nan")) -> RunMetrics:
     """Aggregate per-request records whose ARRIVAL falls in the window.
 
     Degenerate windows are first-class: when nothing arrives (or nothing
@@ -116,6 +125,10 @@ def summarize(records, *, window: tuple[float, float], scheduler: str,
         decision_latency_p99=_pct(dl, 99),
         requeues=sum(r.requeues for r in meas),
         decode_iterations=decode_iterations,
+        prefill_util=prefill_util,
+        decode_util=decode_util,
+        deflected_frac=(sum(1 for r in done if r.deflected) / len(done)
+                        if done else float("nan")),
         **ttft_attribution(records, window),
     )
 
@@ -123,7 +136,8 @@ def summarize(records, *, window: tuple[float, float], scheduler: str,
 def aggregate_seeds(runs: list[RunMetrics]) -> dict:
     """mean ± std across seeds for the headline metrics."""
     keys = ["ttft_mean", "ttft_p99", "tbt_mean", "slo_attainment", "xfer_mean",
-            "goodput_rps", "xfer_share_mean"]
+            "goodput_rps", "xfer_share_mean",
+            "prefill_util", "decode_util", "deflected_frac"]
     out = {"scheduler": runs[0].scheduler, "n_seeds": len(runs)}
     for k in keys:
         vals = np.array([getattr(r, k) for r in runs], dtype=np.float64)

@@ -36,7 +36,7 @@ from collections import OrderedDict, deque
 from typing import Callable, Hashable, Optional, Sequence
 
 from repro.core.cost import B_TOK, IterTimeModel, ModelKVSpec, PrefillTimeModel
-from repro.core.view import ClusterView
+from repro.core.view import ROLE_DECODE, ROLE_PREFILL, ClusterView
 from .engine import LANE_CLOCK, LANE_PREFILL, EventLoop
 
 
@@ -116,6 +116,7 @@ class PrefillSim:
         self.running = None
         self.on_done: Callable | None = None
         self.healthy = True
+        self.busy_s = 0.0        # telemetry: cumulative prefill seconds
 
     def submit(self, rs, now: float) -> None:
         rs.prefill_instance = self.instance_id
@@ -136,6 +137,7 @@ class PrefillSim:
         self.running = rs
         rs.prefill_start = max(now, self.busy_until)
         dur = self.model(rs.req.input_len)
+        self.busy_s += dur
         self.busy_until = rs.prefill_start + dur
         self.loop.at(self.busy_until, self._finish, lane=LANE_PREFILL)
 
@@ -184,6 +186,7 @@ class ChunkedPrefillSim:
         self.on_chunk: Callable | None = None
         self.healthy = True
         self.iterations = 0
+        self.busy_s = 0.0        # telemetry: cumulative iteration seconds
         self.trace = None        # TracePlane sink; mirrors ChunkPlane
         self._iter_base = 0.0    # running iteration's start, kept while tracing
 
@@ -243,6 +246,7 @@ class ChunkedPrefillSim:
         self.backlog -= total
         self.pending -= nfirst
         self.busy_until = base + (self.model.c * total + self.model.d * nfirst)
+        self.busy_s += self.busy_until - base
         if self.trace is not None:
             self._iter_base = base
         self.inflight = served
@@ -316,6 +320,7 @@ class DecodeSim:
         self._iterating = False
         self._iter_event = None
         self.iterations = 0
+        self.busy_s = 0.0        # telemetry: cumulative iteration seconds
         self.on_first_token: Callable | None = None
         self.on_finish: Callable | None = None
         self.view = view
@@ -424,6 +429,7 @@ class DecodeSim:
         self._iterating = True
         self._sync()
         dur = self.iter_model(self.beta) * self.iter_scale
+        self.busy_s += dur
         self._iter_event = self.loop.after(dur, self._iter_done,
                                            lane=LANE_CLOCK)
 
@@ -482,6 +488,7 @@ class ReferenceInstanceEngine:
         self.kv_spec = kv_spec
         self.kv_budget = kv_budget
         self.chunk_tokens = chunk_tokens
+        self.prefill_token_budget = prefill_token_budget
         if chunk_tokens is not None:
             self.prefill = [
                 ChunkedPrefillSim(m.instance_id, m.server, prefill_model,
@@ -522,6 +529,7 @@ class ReferenceInstanceEngine:
 
     @on_prefill_done.setter
     def on_prefill_done(self, fn) -> None:
+        self._on_done_fn = fn     # stored: add_prefill copies it to new sims
         for p in self.prefill:
             p.on_done = fn
 
@@ -532,6 +540,7 @@ class ReferenceInstanceEngine:
 
     @on_chunk_done.setter
     def on_chunk_done(self, fn) -> None:
+        self._on_chunk_fn = fn    # stored: add_prefill copies it to new sims
         for p in self.prefill:
             p.on_chunk = fn
 
@@ -553,6 +562,95 @@ class ReferenceInstanceEngine:
         """Drop a request still prefilling (chunked fault-requeue path)."""
         if self.chunk_tokens is not None:
             self._pre_by_id[rs.prefill_instance].cancel(rs)
+
+    def prefill_backlog(self, now: float) -> float:
+        """RolePlane imbalance signal: min healthy drain ETA minus ``now``
+        (mirrors ``InstancePlane.prefill_backlog`` bit-for-bit)."""
+        etas = [p.eta(now) for p in self.prefill if p.healthy]
+        if not etas:
+            return float("inf")
+        return min(etas) - now
+
+    def add_prefill(self, iid: int, server):
+        """Elastic prefill membership (RolePlane flips, ``add_prefill``
+        fault kind).  New sims inherit the current chunk/budget settings
+        and the engine-level callbacks, like ``add_decode`` does."""
+        if self.chunk_tokens is not None:
+            tmpl = self.prefill[0] if self.prefill else None
+            p = ChunkedPrefillSim(
+                iid, server, self.prefill_model, self.loop,
+                tmpl.chunk if tmpl else self.chunk_tokens,
+                tmpl.budget if tmpl else self.prefill_token_budget)
+            p.on_chunk = getattr(self, "_on_chunk_fn", None)
+            p.trace = self._trace
+        else:
+            p = PrefillSim(iid, server, self.prefill_model, self.loop)
+        p.on_done = getattr(self, "_on_done_fn", None)
+        self.prefill.append(p)
+        self._pre_by_id[iid] = p
+        return p
+
+    def fail_prefill(self, iid: int, now: float) -> list:
+        """Hard prefill failure (``kill_prefill``): drop queued/in-flight
+        work and return the victims — running/stream order, then queue."""
+        p = self._pre_by_id[iid]
+        p.healthy = False
+        victims: list = []
+        if self.chunk_tokens is not None:
+            for st in list(p.streams):
+                victims.append(st[0])
+                p.cancel(st[0])
+            return victims
+        if p.running is not None:
+            victims.append(p.running)
+            p.running = None
+        victims.extend(p.queue)
+        p.queue.clear()
+        return victims
+
+    def prefill_drained(self, iid: int) -> bool:
+        p = self._pre_by_id[iid]
+        if self.chunk_tokens is not None:
+            return not p.streams and p.inflight is None
+        return p.running is None and not p.queue
+
+    def decode_drained(self, iid: int) -> bool:
+        d = self._by_id[iid]
+        return d.healthy and not d.active and not d.queue
+
+    def flip_role(self, iid: int, role: int, now: float) -> None:
+        """Planned role transition — per-object mirror of
+        ``InstancePlane.flip_role`` (drain is the caller's job).  A
+        decode->prefill flip swaps in a fresh BlockCache: the prefix cache
+        hands off (contents and counters), matching RadixPlane's
+        ``reset_instance``."""
+        d = self._by_id[iid]
+        if role == ROLE_PREFILL:
+            self.view.role[d.slot] = ROLE_PREFILL
+            d.cache = BlockCache(d.kv_budget, d.cache.bytes_per_block)
+            d._sync()
+            p = self._pre_by_id.get(iid)
+            if p is not None:
+                p.healthy = True
+            else:
+                self.add_prefill(iid, d.server)
+        elif role == ROLE_DECODE:
+            self._pre_by_id[iid].healthy = False
+            self.view.role[d.slot] = ROLE_DECODE
+            d._sync()
+        else:
+            raise ValueError(f"unknown role {role!r}")
+
+    def set_chunking(self, chunk_tokens: int, token_budget: int) -> None:
+        """Retune chunk size / token budget (auto-tuner; mirrors
+        ``InstancePlane.set_chunking``)."""
+        if self.chunk_tokens is None:
+            raise ValueError("set_chunking requires chunked prefill")
+        if int(chunk_tokens) <= 0 or int(token_budget) <= 0:
+            raise ValueError("chunk_tokens / token_budget must be positive")
+        for p in self.prefill:
+            p.chunk = int(chunk_tokens)
+            p.budget = int(token_budget)
 
     # ---------------------------------------------------------------- decode
     def decode_by_id(self, iid: int) -> DecodeSim:
@@ -623,6 +721,18 @@ class ReferenceInstanceEngine:
     @property
     def total_iterations(self) -> int:
         return sum(d.iterations for d in self.decode)
+
+    @property
+    def prefill_busy_s(self) -> float:
+        return sum(p.busy_s for p in self.prefill)
+
+    @property
+    def decode_busy_s(self) -> float:
+        return sum(d.busy_s for d in self.decode)
+
+    @property
+    def deflect_busy_s(self) -> float:
+        return 0.0   # deflection is plane-engine-only
 
     def cache_stats(self) -> list[dict]:
         """Per-instance cache counters for the parity tests."""

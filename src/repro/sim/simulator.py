@@ -47,7 +47,7 @@ from repro.core.oracle import NetworkCostOracle, SelfContentionTracker
 from repro.core.schedulers import RequestInfo, make_scheduler
 from repro.core.batch_assign import NetKVBatch
 from repro.core.multihop import NetKVMultiHop, StagingStore
-from repro.core.view import ClusterView
+from repro.core.view import ClusterView, ROLE_DECODE, ROLE_PREFILL
 from repro.cluster.network import BackgroundTraffic, FlowPlane, Transfer
 from repro.cluster.topology import FatTree, make_instances
 from repro.traces.mooncake import Request
@@ -56,6 +56,7 @@ from .engine import (
     LANE_FAULT,
     LANE_NET,
     LANE_REWIRE,
+    LANE_ROLE,
     LANE_TICK,
     make_event_loop,
 )
@@ -68,7 +69,8 @@ from .trace import TracePlane, trace_session
 @dataclasses.dataclass
 class FaultEvent:
     time: float
-    kind: str            # "kill_decode" | "add_decode" | "slowdown"
+    # "kill_decode" | "add_decode" | "slowdown" | "kill_prefill" | "add_prefill"
+    kind: str
     instance_id: int = -1
     factor: float = 2.0  # slowdown factor
     detection_delay: float = 0.25
@@ -168,6 +170,33 @@ class SimConfig:
     # active (benchmarks/run.py --trace).
     trace: bool = False
     trace_decisions: int = 1                # record every Nth decision
+    # RolePlane: prefill deflection.  When the healthy prefill pool's
+    # backlog (earliest drain ETA minus now) exceeds deflect_threshold
+    # seconds, an arriving request is offered to the decode instances as a
+    # *prefill* target first: Eq. (4) collapses to a zero-transfer KV term
+    # (the KV is born on the decode host: s_eff = 0, tier 0) plus the
+    # host's deflected-chunk-queue drain ETA.  Requires the plane instance
+    # engine and chunk_tokens (deflected prefill is metered by an
+    # attachable ChunkPlane over the decode slots).
+    deflection: str = "off"                 # "off" | "on"
+    deflect_threshold: float = 0.5          # seconds of prefill backlog
+    # RolePlane: dynamic P:D flipping — a slow control loop on LANE_ROLE
+    # samples prefill backlog every role_flip_interval seconds (0 = off)
+    # and, after role_flip_sustain consecutive samples beyond a bound,
+    # converts ONE drained instance: decode -> prefill above role_flip_hi,
+    # the most recent convert back below role_flip_lo.  Pool floors
+    # (min_prefill / min_decode healthy instances) are never crossed.
+    role_flip_interval: float = 0.0
+    role_flip_sustain: int = 3
+    role_flip_hi: float = 0.75
+    role_flip_lo: float = 0.15
+    min_prefill: int = 1
+    min_decode: int = 1
+    # ChunkPlane auto-tuning: adapt chunk_tokens (and a 4x token budget) to
+    # the observed arrival input-length EWMA.  Requires chunk_tokens; driven
+    # by the arrival stream alone, so both instance engines see identical
+    # retune sequences (parity-safe).
+    chunk_autotune: bool = False
 
 
 class Simulation:
@@ -305,6 +334,30 @@ class Simulation:
             self.engine.trace = self.trace
             self.sched.trace_hook = self.trace
             self.net.record_bottlenecks = True
+        # RolePlane: deflection + P:D flip state.
+        if cfg.deflection not in ("off", "on"):
+            raise ValueError(f"unknown deflection {cfg.deflection!r}")
+        self._deflect_on = cfg.deflection == "on"
+        if self._deflect_on:
+            if not isinstance(self.engine, InstancePlane):
+                raise ValueError("deflection requires the plane instance engine")
+            if cfg.chunk_tokens is None:
+                raise ValueError("deflection requires chunk_tokens")
+            if cfg.kv_streaming:
+                # Deflected KV never crosses the wire, so there is nothing
+                # to stream; refuse rather than silently mix the modes.
+                raise ValueError("deflection does not compose with kv_streaming")
+            self.engine.enable_deflection()
+            self.engine.on_deflect_done = self._on_deflect_done
+        self.deflected = 0
+        self.role_flips = 0
+        self._flipped: list[int] = []   # decode->prefill converts, flip-back LIFO
+        self._hi_run = 0
+        self._lo_run = 0
+        if cfg.chunk_autotune and cfg.chunk_tokens is None:
+            raise ValueError("chunk_autotune requires chunk_tokens")
+        self._chunk_cur = cfg.chunk_tokens
+        self._len_ewma = -1.0
 
     # ---------------------------------------------------------------- trace
     def load_trace(self, trace: Sequence[Request]) -> None:
@@ -331,15 +384,166 @@ class Simulation:
         if self.cfg.net_tick > 0:
             self._tick_next = self.loop.now + self.cfg.net_tick
             self.loop.arm(LANE_TICK, self._tick_next, self._net_tick)
+        if self.cfg.role_flip_interval > 0:
+            self.loop.arm(LANE_ROLE, self.loop.now + self.cfg.role_flip_interval,
+                          self._role_tick)
 
     # ------------------------------------------------------------ prefill side
     def _on_arrival(self, rs: RequestState, now: float) -> None:
+        if self.cfg.chunk_autotune:
+            self._autotune(rs.req.input_len)
+        if self._deflect_on and \
+                self.engine.prefill_backlog(now) > self.cfg.deflect_threshold:
+            if self._deflect_one(rs, now):
+                return
         target = self.engine.pick_prefill(now)
         if target is None:
             rs.rejected = True
             self.rejected += 1
             return
         target.submit(rs, now)
+
+    # -------------------------------------------------- RolePlane: deflection
+    def _deflect_one(self, rs: RequestState, now: float) -> bool:
+        """Offer ``rs`` to the decode instances as a prefill target.
+
+        The deflected ladder (``Scheduler.select_deflected``) scores
+        ROLE_DECODE rows with Eq. (4) collapsed to a zero-transfer KV term;
+        on acceptance the request is committed exactly like a dispatch —
+        sched_time, reserve() pin — except its KV is born in place (tier 0,
+        s_eff = 0).  Returns False (fall back to the prefill pool) when no
+        decode row is feasible.
+        """
+        info = self._make_info(rs, False)
+        if self.trace is not None:
+            self.trace.now = now
+        t0 = _time.perf_counter()
+        decision = self.sched.select_deflected(
+            info, self.view, self.engine.deflect_eta_row(now))
+        dt = _time.perf_counter() - t0
+        self.decision_latencies.append(dt)
+        self.loop.note_select(dt)
+        if decision is None:
+            return False
+        iid = decision.instance_id
+        rs.sched_time = now
+        rs.decode_instance = iid
+        rs.tier = 0
+        rs.s_eff = 0.0
+        rs.hit_tokens = 0.0
+        self.engine.reserve(iid, rs, now)
+        self.engine.submit_deflected(iid, rs, now)
+        self.deflected += 1
+        return True
+
+    def _on_deflect_done(self, rs: RequestState, now: float) -> None:
+        """Deflected prefill finished *on the decode host itself*: the KV
+        is already resident, so admission is immediate — no transfer and no
+        base-latency hop (the network term collapsed at selection time)."""
+        if rs.rejected:
+            return
+        rs.transfer_end = now
+        iid = rs.decode_instance
+        if not self.engine.is_healthy(iid):
+            # Host died while the deflected chunks were still metering:
+            # release the reserve() pin and re-run from scratch.
+            self.engine.release(iid, rs)
+            self._requeue(rs, now)
+            return
+        self.engine.enqueue(iid, rs, now)
+        self.engine.kick((iid,), now)
+
+    # ---------------------------------------------- RolePlane: P:D flipping
+    def _role_tick(self, now: float) -> None:
+        """Slow control loop: sample prefill backlog on the role lane,
+        convert one drained instance per sustained-imbalance episode."""
+        sig = self.engine.prefill_backlog(now)
+        if sig > self.cfg.role_flip_hi:
+            self._hi_run += 1
+            self._lo_run = 0
+        elif sig < self.cfg.role_flip_lo:
+            self._lo_run += 1
+            self._hi_run = 0
+        else:
+            self._hi_run = self._lo_run = 0
+        if self._hi_run >= self.cfg.role_flip_sustain:
+            if self._flip_to_prefill(now):
+                self._hi_run = 0
+        elif self._lo_run >= self.cfg.role_flip_sustain and self._flipped:
+            if self._flip_back(now):
+                self._lo_run = 0
+        if not self.loop.empty():
+            self.loop.arm(LANE_ROLE, now + self.cfg.role_flip_interval,
+                          self._role_tick)
+
+    def _n_prefill_role(self) -> int:
+        eng = self.engine
+        if isinstance(eng, InstancePlane):
+            return int(eng.p_healthy[: eng.n_pre].sum())
+        return sum(1 for p in eng.prefill if p.healthy)
+
+    def _flip_to_prefill(self, now: float) -> bool:
+        """Sustained prefill starvation: convert the lowest-id drained
+        decode instance (no active batch, queue, deflected stream, or
+        in-flight inbound transfer) to a prefill worker."""
+        v = self.view
+        cands = [int(v.ids[s]) for s in range(v.n)
+                 if v.role[s] == ROLE_DECODE
+                 and self.engine.is_healthy(int(v.ids[s]))]
+        if len(cands) - 1 < self.cfg.min_decode:
+            return False
+        for iid in sorted(cands):
+            if self._inbound.get(iid):
+                continue
+            if not self.engine.decode_drained(iid):
+                continue
+            self.engine.flip_role(iid, ROLE_PREFILL, now)
+            self._flipped.append(iid)
+            self.role_flips += 1
+            if self.trace is not None:
+                self.trace.role_flip(iid, now, ROLE_PREFILL)
+            return True
+        return False
+
+    def _flip_back(self, now: float) -> bool:
+        """Sustained prefill idleness: return the most recent convert to
+        decode duty once its prefill work has drained."""
+        iid = self._flipped[-1]
+        if not self.engine.prefill_drained(iid):
+            return False
+        if self._n_prefill_role() - 1 < self.cfg.min_prefill:
+            return False
+        self.engine.flip_role(iid, ROLE_DECODE, now)
+        self._flipped.pop()
+        self.role_flips += 1
+        if self.trace is not None:
+            self.trace.role_flip(iid, now, ROLE_DECODE)
+        return True
+
+    # ------------------------------------------------ ChunkPlane auto-tuning
+    def _autotune(self, input_len: int) -> None:
+        """EWMA-driven chunk-size controller.
+
+        Tracks arrival input lengths (EWMA, alpha 0.3) and retunes
+        ``chunk_tokens`` to the largest power of two at most 1/8 of the
+        typical length, clamped to [128, 2048], with a 4x iteration token
+        budget — so a typical request prefills in a handful of
+        interleavable chunks instead of one monolithic slice (short inputs)
+        or hundreds of tiny ones (long inputs).
+        """
+        l = float(input_len)
+        if self._len_ewma < 0:
+            self._len_ewma = l
+        else:
+            self._len_ewma += 0.3 * (l - self._len_ewma)
+        target = self._len_ewma / 8.0
+        chunk = 128
+        while chunk * 2 <= target and chunk < 2048:
+            chunk *= 2
+        if chunk != self._chunk_cur:
+            self._chunk_cur = chunk
+            self.engine.set_chunking(chunk, 4 * chunk)
+            self._chunk_eff = chunk
 
     def _on_prefill_done(self, rs: RequestState, now: float) -> None:
         if rs.rejected:
@@ -847,6 +1051,37 @@ class Simulation:
             srv = min(sorted(pop), key=pop.get)
             self._server_of[new_id] = srv
             self.engine.add_decode(new_id, srv)
+        elif f.kind == "kill_prefill":
+            victims = self.engine.fail_prefill(f.instance_id, now)
+            for rs in victims:
+                if rs.decode_instance >= 0:
+                    # Streamed dispatch caught mid-prefill: abort its
+                    # in-flight inbound flows and release the reserve()
+                    # pin before re-running from scratch.
+                    lst = self._inbound.get(rs.decode_instance, [])
+                    mine = [(r, t) for (r, t) in lst if r is rs]
+                    self._inbound[rs.decode_instance] = [
+                        (r, t) for (r, t) in lst if r is not rs
+                    ]
+                    for _, tr in mine:
+                        self.net.abort_transfer(tr, now)
+                    if self.sched.uses_self_contention:
+                        self.inflight.decr(rs.prefill_instance, rs.tier)
+                    self.engine.release(rs.decode_instance, rs)
+                self._requeue(rs, now)
+            self._reschedule_net(now)
+        elif f.kind == "add_prefill":
+            new_id = max(self._server_of) + 1
+            # Elastic prefill join: add_decode's placement policy over the
+            # prefill-hosting servers.
+            pop = {}
+            for p in self.prefill:
+                pop.setdefault(p.server, 0)
+                if p.healthy:
+                    pop[p.server] += 1
+            srv = min(sorted(pop), key=pop.get)
+            self._server_of[new_id] = srv
+            self.engine.add_prefill(new_id, srv)
         else:
             raise ValueError(f.kind)
 
@@ -876,6 +1111,9 @@ class Simulation:
         rs.stream_open = 0
         rs.stream_scheduled = False
         rs.stream_last = False
+        # A deflected attempt that died re-runs through the ordinary
+        # arrival gate (it may deflect again, or prefill normally).
+        rs.deflected = False
         # Clear every per-attempt field from the failed attempt: a stale
         # first_token/admit_time would report a phantom TTFT for a request
         # that never decoded, and stale tier/s_eff/hit_tokens would skew the
@@ -905,6 +1143,17 @@ class Simulation:
             sess = trace_session()
             if sess is not None:
                 sess.register(self.cfg.scheduler, self.trace, self.records)
+        # Per-role utilization: busy seconds over instance-seconds.  The
+        # denominators use the final pool sizes (handle lists grow under
+        # add_* faults and role flips) — a telemetry approximation, not a
+        # parity-checked outcome.
+        elapsed = max(self.loop.now, 1e-9)
+        n_pre = len(self.prefill)
+        n_dec = len(self.decode)
+        prefill_util = (self.engine.prefill_busy_s / (n_pre * elapsed)
+                        if n_pre else float("nan"))
+        decode_util = ((self.engine.decode_busy_s + self.engine.deflect_busy_s)
+                       / (n_dec * elapsed) if n_dec else float("nan"))
         return summarize(
             self.records,
             window=(self.cfg.warmup, self.cfg.warmup + self.cfg.measure),
@@ -912,6 +1161,8 @@ class Simulation:
             decision_latencies=self.decision_latencies,
             rejected=self.rejected,
             decode_iterations=self.engine.total_iterations,
+            prefill_util=prefill_util,
+            decode_util=decode_util,
         )
 
 

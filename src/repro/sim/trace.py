@@ -55,9 +55,11 @@ if TYPE_CHECKING:  # pragma: no cover
 #   admit_wait transfer_end -> admit_time        (decode track)
 #   first_iter admit_time -> first_token         (decode track)
 #   decode     first_token -> finish             (decode track; a=tokens_out)
+#   deflect    one deflected-prefill chunk slice (decode track; a=tokens, b=done)
+#   role_flip  RolePlane P:D transition instant  (decode track; a=new role)
 SPAN_KINDS = (
     "queue", "prefill", "chunk", "xfer", "xfer_seg", "lat",
-    "admit_wait", "first_iter", "decode",
+    "admit_wait", "first_iter", "decode", "deflect", "role_flip",
 )
 _PREFILL_TRACK = frozenset(("queue", "prefill", "chunk"))
 
@@ -121,10 +123,15 @@ class TracePlane:
         self.s_a.append(float(a))
         self.s_b.append(float(b))
 
-    def chunk(self, rs, inst, t0, t1, take, done) -> None:
-        """One prefill chunk finishing an instance iteration."""
-        self.span("chunk", rs.req.request_id, t0, t1, inst,
+    def chunk(self, rs, inst, t0, t1, take, done, kind: str = "chunk") -> None:
+        """One prefill chunk finishing an instance iteration (``kind=
+        "deflect"`` when the chunk ran on a decode host via RolePlane)."""
+        self.span(kind, rs.req.request_id, t0, t1, inst,
                   a=float(take), b=float(done))
+
+    def role_flip(self, iid, now, role) -> None:
+        """One RolePlane P:D transition (zero-duration instant)."""
+        self.span("role_flip", -1, now, now, iid, a=float(role))
 
     def segment(self, rs, transfer) -> None:
         """One completed KV ``Transfer`` (deduped across callback paths)."""

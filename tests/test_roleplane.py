@@ -1,0 +1,331 @@
+"""RolePlane: role-columned instances, prefill deflection, P:D flipping.
+
+Covers the PR-10 tentpole and its satellites:
+
+* role-flip parity drives — full ``Simulation`` runs with the LANE_ROLE
+  slow loop converting instances prefill<->decode mid-trace must replay
+  bit-exactly on the plane vs reference instance engines, under both
+  event engines (the flips themselves, driven by the parity-proven
+  prefill-backlog signal, land at identical instants on both arms),
+* ``kill_prefill`` / ``add_prefill`` fault kinds with requeue semantics
+  for in-flight (chunked) prefill,
+* prefill deflection — storm smoke (nonzero deflected fraction, TTFT no
+  worse than undeflected), configuration refusals, and the zero-deflection
+  bit-exactness of the default config,
+* ``DeflectedCohortSelector`` vs the sequential ``select_deflected``
+  ladder: decisions AND RNG tie draws bit-identical,
+* deflected-prefill compute telescopes to the monolithic ``c*l + d``
+  (hypothesis property over chunk/budget/length mixes),
+* per-role utilization + deflected-fraction metrics columns (NaN-safe).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.cost import (
+    H100_TP4_ITER,
+    H100_TP4_PREFILL,
+    LLAMA3_70B_KV,
+    deflected_cost,
+)
+from repro.core.dispatch import DeflectedCohortSelector
+from repro.core.schedulers import RequestInfo, make_scheduler
+from repro.core.view import ClusterView, ROLE_DECODE, ROLE_PREFILL
+from repro.sim import (
+    EventLoop,
+    FaultEvent,
+    InstancePlane,
+    RequestState,
+    SimConfig,
+    Simulation,
+)
+from repro.sim.metrics import aggregate_seeds, summarize
+from repro.traces import generate_trace
+from repro.traces.mooncake import Request
+
+# Thin prefill pool on the 64-GPU tree: prefill-bottlenecked, so backlog
+# crosses the flip/deflection thresholds under a storm.
+TREE = dict(n_pods=2, racks_per_pod=2, servers_per_rack=2, n_prefill=2)
+STORM_RPS = 6.0
+
+
+def _trace(seed, duration=5.0, rps=STORM_RPS):
+    return generate_trace("rag", duration=duration, target_rps=rps, seed=seed)
+
+
+def _run(engine, seed=0, faults=(), event_engine="plane", **kw):
+    kw.setdefault("background", 0.2)
+    kw.setdefault("chunk_tokens", 2048)
+    kw.setdefault("prefill_token_budget", 4096)
+    cfg = SimConfig(scheduler="netkv-full", seed=seed, warmup=1.0,
+                    measure=3.0, instance_engine=engine, faults=faults,
+                    event_engine=event_engine, **TREE, **kw)
+    sim = Simulation(cfg)
+    sim.run(_trace(seed), drain=40.0)
+    return sim
+
+
+def _outcomes(sim):
+    recs = [
+        (r.req.request_id, r.prefill_instance, r.prefill_start, r.prefill_end,
+         r.sched_time, r.decode_instance, r.tier, r.s_eff, r.hit_tokens,
+         r.transfer_end, r.admit_time, r.first_token, r.finish, r.tbt,
+         r.tokens_out, r.rejected, r.requeues, r.deflected)
+        for r in sim.records
+    ]
+    finish_order = sorted(
+        (r.finish, r.req.request_id) for r in sim.records if r.finish >= 0
+    )
+    return recs, finish_order, sim.engine.cache_stats()
+
+
+def _assert_parity(a, b):
+    ra, fa, ca = _outcomes(a)
+    rb, fb, cb = _outcomes(b)
+    assert ra == rb
+    assert fa == fb
+    assert ca == cb
+
+
+FLIP_KW = dict(role_flip_interval=0.25, role_flip_sustain=2,
+               role_flip_hi=0.2, role_flip_lo=0.05)
+
+
+class TestRoleFlipParity:
+    @pytest.mark.parametrize("event_engine", ["plane", "reference"])
+    def test_flip_parity_chunked(self, event_engine):
+        """Mid-trace decode->prefill (and back) conversions must replay
+        bit-exactly on both instance engines, under both event engines."""
+        a = _run("plane", event_engine=event_engine, **FLIP_KW)
+        b = _run("reference", event_engine=event_engine, **FLIP_KW)
+        assert a.role_flips > 0          # the loop actually converted
+        assert a.role_flips == b.role_flips
+        _assert_parity(a, b)
+
+    def test_flip_parity_serial(self):
+        """Serial (non-chunked) prefill: flips route through the
+        PrefillSim/pick_prefill path instead of the ChunkPlane."""
+        a = _run("plane", chunk_tokens=None, prefill_token_budget=None,
+                 **FLIP_KW)
+        b = _run("reference", chunk_tokens=None, prefill_token_budget=None,
+                 **FLIP_KW)
+        assert a.role_flips > 0
+        assert a.role_flips == b.role_flips
+        _assert_parity(a, b)
+
+    def test_flip_back_occurs(self):
+        """With a post-storm quiet tail the controller must return at
+        least one convert to decode duty (both directions exercised)."""
+        sim = _run("plane", **FLIP_KW)
+        # flips counts both directions; _flipped holds unreturned converts.
+        assert sim.role_flips > len(sim._flipped)
+
+    def test_trace_spans(self):
+        sim = _run("plane", trace=True, deflection="on",
+                   deflect_threshold=0.3, **FLIP_KW)
+        kinds = {s[0] for s in sim.trace.spans()}
+        assert "role_flip" in kinds
+        assert "deflect" in kinds
+
+
+class TestPrefillFaults:
+    FAULTS = (
+        FaultEvent(time=1.4, kind="kill_prefill", instance_id=0),
+        FaultEvent(time=1.9, kind="add_prefill"),
+    )
+
+    @pytest.mark.parametrize("chunked", [True, False])
+    def test_kill_add_prefill_parity(self, chunked):
+        kw = {} if chunked else dict(chunk_tokens=None,
+                                     prefill_token_budget=None)
+        a = _run("plane", faults=self.FAULTS, **kw)
+        b = _run("reference", faults=self.FAULTS, **kw)
+        _assert_parity(a, b)
+        # In-flight prefill work on the killed instance was requeued.
+        assert sum(r.requeues for r in a.records) > 0
+
+    def test_kill_prefill_requeue_semantics(self):
+        """Victims re-enter through the arrival gate and eventually land
+        on a surviving prefill instance (or the elastic join)."""
+        sim = _run("plane", faults=self.FAULTS)
+        requeued = [r for r in sim.records if r.requeues > 0]
+        assert requeued
+        for r in requeued:
+            if r.finish >= 0:
+                assert r.prefill_instance != 0
+
+
+class TestDeflection:
+    def test_storm_smoke(self):
+        on = _run("plane", deflection="on", deflect_threshold=0.3)
+        off = _run("plane")
+        assert on.deflected > 0
+        assert any(r.deflected for r in on.records)
+        # Deflected requests carry the collapsed Eq. (4): born-local KV.
+        for r in on.records:
+            if r.deflected and r.finish >= 0:
+                assert r.tier == 0 and r.s_eff == 0.0
+                assert r.prefill_instance == r.decode_instance
+        assert off.deflected == 0
+        assert not any(r.deflected for r in off.records)
+
+    def test_default_off_is_noop(self):
+        """deflection="off" must not perturb the engine or the RNG
+        stream: identical outcomes to a config that never knew about
+        deflection (guards the default-path bit-exactness claim)."""
+        a = _run("plane")
+        b = _run("plane", deflection="off")
+        _assert_parity(a, b)
+
+    def test_refusals(self):
+        base = dict(scheduler="netkv-full", **TREE)
+        with pytest.raises(ValueError, match="plane instance engine"):
+            Simulation(SimConfig(deflection="on", chunk_tokens=2048,
+                                 instance_engine="reference", **base))
+        with pytest.raises(ValueError, match="chunk_tokens"):
+            Simulation(SimConfig(deflection="on", **base))
+        with pytest.raises(ValueError, match="kv_streaming"):
+            Simulation(SimConfig(deflection="on", chunk_tokens=2048,
+                                 kv_streaming=True, **base))
+        with pytest.raises(ValueError, match="deflection"):
+            Simulation(SimConfig(deflection="maybe", **base))
+        with pytest.raises(ValueError, match="chunk_autotune"):
+            Simulation(SimConfig(chunk_autotune=True, **base))
+
+
+class TestAutotuneParity:
+    def test_autotune_parity(self):
+        """The EWMA retune sequence is driven by the arrival stream alone,
+        so both instance engines see identical chunking timelines."""
+        a = _run("plane", chunk_autotune=True)
+        b = _run("reference", chunk_autotune=True)
+        assert a._chunk_cur != a.cfg.chunk_tokens  # the controller retuned
+        assert a._chunk_cur == b._chunk_cur
+        _assert_parity(a, b)
+
+
+class TestDeflectedCohortSelector:
+    def _view(self, n=8, seed=0):
+        rng = np.random.default_rng(seed)
+        cv = ClusterView(capacity=n)
+        for i in range(n):
+            cv.add_instance(
+                i, free_memory=float(rng.uniform(2e9, 80e9)),
+                queued=int(rng.integers(0, 6)), batch=int(rng.integers(0, 32)),
+                healthy=bool(rng.random() > 0.1),
+                iter_scale=float(rng.uniform(1.0, 2.0)),
+                role=ROLE_DECODE if rng.random() > 0.2 else ROLE_PREFILL)
+        return cv
+
+    def test_matches_sequential_ladder(self):
+        """select_row(0..R-1) vs fresh select_deflected calls against a
+        hand-evolved view: decisions and RNG tie draws bit-identical."""
+        model = H100_TP4_PREFILL
+        rng = np.random.default_rng(7)
+        reqs = [RequestInfo(r, int(rng.integers(64, 16384)),
+                            float(rng.uniform(1e8, 30e9)))
+                for r in range(12)]
+        for seed in (0, 1):
+            cv_a, cv_b = self._view(seed=seed), self._view(seed=seed)
+            eta0 = np.asarray(np.random.default_rng(seed + 9).uniform(
+                0.0, 2.0, cv_a.n))
+            sched_a = make_scheduler("netkv-full", H100_TP4_ITER, 64, seed=3)
+            sched_b = make_scheduler("netkv-full", H100_TP4_ITER, 64, seed=3)
+            sel = DeflectedCohortSelector(sched_a, reqs, cv_a, eta0, model)
+            eta = eta0.copy()
+            for k, req in enumerate(reqs):
+                da = sel.select_row(k)
+                db = sched_b.select_deflected(req, cv_b, eta)
+                assert (da is None) == (db is None)
+                if da is None:
+                    continue
+                assert (da.instance_id, da.cost, da.s_eff, da.tier) == \
+                       (db.instance_id, db.cost, db.s_eff, db.tier)
+                j = cv_b.slot_of(db.instance_id)
+                # The live engine's evolution between sequential calls:
+                # ChunkPlane ETA fold + reserve-time pin.
+                eta[j] += model.c * req.input_len + model.d
+                cv_b.free_memory[j] = max(
+                    cv_b.free_memory[j] - req.kv_bytes, 0.0)
+            # Both RNG streams drew identically (same number of ties).
+            assert sched_a._rng.random() == sched_b._rng.random()
+
+
+class _Meta:
+    def __init__(self, iid, srv):
+        self.instance_id, self.server = iid, srv
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_deflected_telescoping(data):
+    """Deflected-prefill compute on a decode host telescopes to the
+    monolithic ``c*l + d`` per request — the same conservation law the
+    main ChunkPlane obeys, now through the attachable deflect plane."""
+    chunk = data.draw(st.integers(16, 2048), label="chunk")
+    budget = data.draw(st.one_of(st.none(), st.integers(16, 8192)),
+                       label="budget")
+    lens = data.draw(st.lists(st.integers(1, 6000), min_size=1, max_size=6),
+                     label="lens")
+    model = H100_TP4_PREFILL
+    loop = EventLoop()
+    view = ClusterView(capacity=4)
+    eng = InstancePlane([_Meta(0, (0, 0, 0))], [_Meta(1, (0, 0, 1))],
+                        view=view, loop=loop, iter_model=H100_TP4_ITER,
+                        prefill_model=model, beta_max=64,
+                        kv_spec=LLAMA3_70B_KV, kv_budget=1e18,
+                        chunk_tokens=chunk, prefill_token_budget=budget)
+    eng.enable_deflection()
+    got = []
+    eng.on_deflect_done = lambda rs, now: got.append(rs)
+    rss = [
+        RequestState(
+            req=Request(request_id=i, arrival=0.0, input_len=l, output_len=4,
+                        block_hashes=((i, 0),), share_group=-1, slo=5.0),
+            kv_bytes=1.0)
+        for i, l in enumerate(lens)
+    ]
+    t0 = float(eng.deflect_eta_row(0.0)[view.slot_of(1)])
+    assert t0 == 0.0                       # idle host: no deflect backlog
+    for rs in rss:
+        eng.submit_deflected(1, rs, 0.0)
+    loop.run()
+    assert len(got) == len(rss)
+    assert all(rs.deflected for rs in rss)
+    if len(rss) == 1:
+        rs, l = rss[0], lens[0]
+        assert rs.prefill_end - rs.prefill_start == pytest.approx(
+            model.c * l + model.d, rel=1e-9)
+    makespan = max(rs.prefill_end for rs in rss)
+    assert makespan == pytest.approx(
+        model.c * sum(lens) + model.d * len(lens), rel=1e-9)
+    assert eng.deflect_busy_s == pytest.approx(makespan, rel=1e-9)
+
+
+class TestRoleMetrics:
+    def test_utilization_columns(self):
+        sim = _run("plane", deflection="on", deflect_threshold=0.3)
+        # Re-summarize from the finished state (run() already returned).
+        m = summarize(sim.records, window=(1.0, 4.0), scheduler="netkv-full")
+        assert math.isfinite(m.deflected_frac)
+        assert m.deflected_frac >= 0.0
+
+    def test_run_reports_utilization(self):
+        cfg = SimConfig(scheduler="netkv-full", seed=0, warmup=1.0,
+                        measure=3.0, background=0.2, chunk_tokens=2048,
+                        prefill_token_budget=4096, **TREE)
+        m = Simulation(cfg).run(_trace(0), drain=40.0)
+        assert 0.0 < m.prefill_util <= 1.0
+        assert 0.0 < m.decode_util <= 1.0
+        assert m.deflected_frac == 0.0
+
+    def test_nan_safe_empty_window(self):
+        m = summarize([], window=(0.0, 1.0), scheduler="x")
+        assert math.isnan(m.deflected_frac)
+        assert math.isnan(m.prefill_util) and math.isnan(m.decode_util)
+        agg = aggregate_seeds([m])
+        assert math.isnan(agg["deflected_frac"])
